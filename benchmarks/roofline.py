@@ -1,0 +1,58 @@
+"""Roofline report: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and renders the per-cell three-term roofline table
+used in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR",
+                            os.path.join("experiments", "dryrun"))
+
+
+def load_cells(directory: str = DRYRUN_DIR):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            cells[os.path.basename(path)[:-5]] = json.load(f)
+    return cells
+
+
+def run(directory: str = DRYRUN_DIR, mesh_filter: str | None = None):
+    header = ("cell", "chips", "peak_GiB/dev", "compute_s", "memory_s",
+              "collective_s", "bottleneck", "model_flops_ratio",
+              "compile_s", "status")
+    rows = []
+    for name, c in load_cells(directory).items():
+        if mesh_filter and not name.endswith(mesh_filter):
+            continue
+        if "skipped" in c:
+            rows.append((name, "--", "--", "--", "--", "--", "--", "--",
+                         "--", "SKIP(" + c["skipped"][:40] + ")"))
+            continue
+        if "error" in c:
+            rows.append((name, "--", "--", "--", "--", "--", "--", "--",
+                         "--", "FAIL(" + c["error"][:60] + ")"))
+            continue
+        rf = c["roofline"]
+        rows.append((
+            name, c["n_chips"],
+            f"{c['memory']['peak_per_device_bytes'] / 2**30:.2f}",
+            f"{rf['compute_s']:.3e}", f"{rf['memory_s']:.3e}",
+            f"{rf['collective_s']:.3e}", rf["bottleneck"].replace("_s", ""),
+            f"{rf.get('model_flops_ratio', 0.0):.3f}",
+            f"{c['compile_s']:.0f}", "OK",
+        ))
+    return header, rows
+
+
+def main():
+    header, rows = run()
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

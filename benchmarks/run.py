@@ -1,0 +1,107 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark aggregator.
+
+Each paper table/figure has a module; this runner executes them all and
+emits one summary CSV line per benchmark in the required
+``name,us_per_call,derived`` format (us_per_call = wall microseconds per
+primary solve/lower unit; derived = the benchmark's headline metric),
+followed by the full tables.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def main() -> None:
+    t_all = time.time()
+    summaries = []
+    full_outputs = []
+
+    # Table 1 — instances
+    from . import table1_instances
+    t0 = time.time()
+    h, rows = table1_instances.run()
+    dt = (time.time() - t0) / max(len(rows), 1)
+    summaries.append(("table1_instances", dt * 1e6,
+                      f"instances={len(rows)}"))
+    full_outputs.append(("TABLE 1 — problem instances", h, rows))
+
+    # Tables 2/3/4/5 share the solve cache
+    from . import table2_energy_latency, table3_overall, table4_lanczos, \
+        table5_pdhg
+    from ._shared import cached_results
+    t0 = time.time()
+    res = cached_results()
+    n_solves = sum(len(v["backends"]) for v in res.values())
+    solve_us = (time.time() - t0) / max(n_solves, 1) * 1e6
+
+    h, rows = table2_energy_latency.run()
+    # headline: median PDHG energy factor for TaOx-HfOx
+    import statistics
+    factors = []
+    for r in rows:
+        if r[1] == "TaOx-HfOx" and r[9] != "--":
+            factors.append(float(r[9].rstrip("x")))
+    med = statistics.median(factors) if factors else 0.0
+    summaries.append(("table2_energy_latency", solve_us,
+                      f"median_taox_pdhg_energy_factor={med:.1f}x"))
+    full_outputs.append(("TABLE 2 — energy/latency + factors", h, rows))
+
+    h, rows = table3_overall.run()
+    summaries.append(("table3_overall", solve_us, f"problems={len(rows)}"))
+    full_outputs.append(("TABLE 3 — overall improvement factors", h, rows))
+
+    h, rows = table4_lanczos.run()
+    summaries.append(("table4_lanczos", solve_us, f"rows={len(rows)}"))
+    full_outputs.append(("TABLE 4 — Lanczos breakdown", h, rows))
+
+    h, rows = table5_pdhg.run()
+    summaries.append(("table5_pdhg", solve_us, f"rows={len(rows)}"))
+    full_outputs.append(("TABLE 5 — PDHG breakdown", h, rows))
+
+    # Figure 2 — convergence vs latency
+    from . import fig2_convergence
+    t0 = time.time()
+    traces = fig2_convergence.run()
+    dt = time.time() - t0
+    final_gap = traces["TaOx-HfOx"][-1][2]
+    summaries.append(("fig2_convergence", dt * 1e6 / 3,
+                      f"taox_final_gap={final_gap:.2e}"))
+    full_outputs.append((
+        "FIGURE 2 — convergence vs latency (CSV in experiments/fig2)",
+        ("accelerator", "checkpoints", "final_gap", "final_latency_s"),
+        [(k, len(v), f"{v[-1][2]:.2e}", f"{v[-1][0]:.2f}")
+         for k, v in traces.items()],
+    ))
+
+    # Roofline table from dry-run artifacts (if present)
+    from . import roofline
+    h, rows = roofline.run()
+    ok = sum(1 for r in rows if r[-1] == "OK")
+    summaries.append(("roofline", 0.0,
+                      f"cells_ok={ok}/{len(rows)}"))
+    if rows:
+        full_outputs.append(("ROOFLINE — per (arch x shape x mesh)", h,
+                             rows))
+
+    print("name,us_per_call,derived")
+    for s in summaries:
+        _emit(*s)
+    print()
+    for title, h, rows in full_outputs:
+        print(f"== {title} ==")
+        print(",".join(h))
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        print()
+    print(f"total benchmark wall time: {time.time() - t_all:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 2: optimality gap + total energy/latency per accelerator,
+for the Lanczos and PDHG phases, with improvement factors over gpuPDLP."""
+from __future__ import annotations
+
+from ._shared import BACKENDS, cached_results, fmt_factor
+
+
+def run(refresh: bool = False):
+    res = cached_results(refresh)
+    header = ("problem", "accelerator",
+              "lanczos_gap", "lanczos_E_J", "lanczos_E_factor",
+              "lanczos_t_s", "lanczos_t_factor",
+              "pdhg_gap", "pdhg_E_J", "pdhg_E_factor",
+              "pdhg_t_s", "pdhg_t_factor")
+    rows = []
+    for name, inst in res.items():
+        gpu = inst["backends"]["gpuPDLP"]
+        for bk in BACKENDS:
+            b = inst["backends"][bk]
+            is_gpu = bk == "gpuPDLP"
+            rows.append((
+                name, bk,
+                f"{b['lanczos']['gap']:.2e}",
+                f"{b['lanczos']['energy_j']:.4f}",
+                "--" if is_gpu else fmt_factor(gpu["lanczos"]["energy_j"],
+                                               b["lanczos"]["energy_j"]),
+                f"{b['lanczos']['latency_s']:.4f}",
+                "--" if is_gpu else fmt_factor(gpu["lanczos"]["latency_s"],
+                                               b["lanczos"]["latency_s"]),
+                f"{b['pdhg']['gap']:.2e}",
+                f"{b['pdhg']['energy_j']:.4f}",
+                "--" if is_gpu else fmt_factor(gpu["pdhg"]["energy_j"],
+                                               b["pdhg"]["energy_j"]),
+                f"{b['pdhg']['latency_s']:.4f}",
+                "--" if is_gpu else fmt_factor(gpu["pdhg"]["latency_s"],
+                                               b["pdhg"]["latency_s"]),
+            ))
+    return header, rows
+
+
+def main():
+    header, rows = run()
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

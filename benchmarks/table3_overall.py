@@ -1,0 +1,35 @@
+"""Paper Table 3: overall (Lanczos + PDHG) energy & latency improvement
+factors of the RRAM solvers over the GPU baseline."""
+from __future__ import annotations
+
+from ._shared import cached_results, fmt_factor
+
+
+def run(refresh: bool = False):
+    res = cached_results(refresh)
+    header = ("problem", "EpiRAM_power", "EpiRAM_latency",
+              "TaOx-HfOx_power", "TaOx-HfOx_latency")
+    rows = []
+    for name, inst in res.items():
+        gpu = inst["backends"]["gpuPDLP"]["total"]
+        epi = inst["backends"]["EpiRAM"]["total"]
+        tao = inst["backends"]["TaOx-HfOx"]["total"]
+        rows.append((
+            name,
+            fmt_factor(gpu["total_energy_j"], epi["total_energy_j"]),
+            fmt_factor(gpu["total_latency_s"], epi["total_latency_s"]),
+            fmt_factor(gpu["total_energy_j"], tao["total_energy_j"]),
+            fmt_factor(gpu["total_latency_s"], tao["total_latency_s"]),
+        ))
+    return header, rows
+
+
+def main():
+    header, rows = run()
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

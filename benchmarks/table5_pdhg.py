@@ -1,0 +1,43 @@
+"""Paper Table 5: PDHG-phase breakdown (objective vs relaxed optimum, k*,
+per-phase energy/latency components)."""
+from __future__ import annotations
+
+from ._shared import BACKENDS, cached_results
+
+
+def run(refresh: bool = False):
+    res = cached_results(refresh)
+    header = ("problem", "relaxed_obj", "accelerator", "objective", "k",
+              "E_h2d_or_write_J", "E_solve_or_read_J", "E_d2h_J",
+              "t_h2d_or_write_s", "t_solve_or_read_s", "t_d2h_s",
+              "E_total_J", "t_total_s")
+    rows = []
+    for name, inst in res.items():
+        for bk in BACKENDS:
+            b = inst["backends"][bk]["pdhg"]
+            d = b["breakdown"]
+            if bk == "gpuPDLP":
+                parts = (d["h2d_energy_j"], d["solve_energy_j"],
+                         d["d2h_energy_j"], d["h2d_latency_s"],
+                         d["solve_latency_s"], d["d2h_latency_s"])
+            else:
+                parts = (d["write_energy_j"], d["read_energy_j"], 0.0,
+                         d["write_latency_s"], d["read_latency_s"], 0.0)
+            rows.append((
+                name, f"{inst['obj_opt']:.4f}", bk, f"{b['obj']:.4f}",
+                b["k"],
+                *(f"{p:.4f}" for p in parts),
+                f"{b['energy_j']:.4f}", f"{b['latency_s']:.4f}",
+            ))
+    return header, rows
+
+
+def main():
+    header, rows = run()
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Beyond-paper demo: LM inference through the crossbar substrate.
+
+The paper closes by noting its MVM-centric framework "is adaptable to a
+broader class of ... machine learning problems".  This example runs a tiny
+LM's final projection through the simulated analog crossbar (encode-once
+weights, noisy reads) and measures how device noise perturbs next-token
+argmax agreement — connecting the LP substrate to the assigned LM stack.
+
+    PYTHONPATH=src python examples/analog_inference.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.crossbar import EPIRAM, TAOX_HFOX, CrossbarArray
+from repro.models import forward, init_params
+
+
+def main():
+    cfg = get_smoke_config("granite-3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 8, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    logits = forward(params, cfg, tokens=toks)          # digital reference
+    h_states = np.asarray(logits)                        # (B, S, V)
+    digital_next = h_states[:, -1, :].argmax(-1)
+
+    # re-do the final projection on the analog accelerator: encode the
+    # (V, d) embedding matrix once, stream the hidden states
+    # (we recompute h via a forward hook-free trick: logits = h @ E^T, so
+    # we recover h by projecting through the pseudo-inverse-free path —
+    # here we simply re-run the backbone up to the final norm)
+    from repro.models import lm as lm_mod
+
+    h = jnp.take(params["embed"], toks, axis=0)
+
+    def body(hh, layer_p):
+        return lm_mod._block(layer_p, hh, cfg), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = lm_mod.rms_norm(h, params["final_norm"])
+    h_last = np.asarray(h[:, -1, :])                     # (B, d)
+
+    E = np.asarray(params["embed"])                      # (V, d)
+    for dev in (EPIRAM, TAOX_HFOX):
+        arr = CrossbarArray.program(E, dev, key=jax.random.PRNGKey(2))
+        analog_logits = np.stack([
+            np.asarray(arr.mvm(h_last[i], key=jax.random.PRNGKey(10 + i)))
+            for i in range(B)
+        ])
+        agree = (analog_logits.argmax(-1) == digital_next).mean()
+        drift = np.abs(analog_logits - h_states[:, -1, :]).max() / \
+            np.abs(h_states[:, -1, :]).max()
+        print(f"{dev.name:10s}: argmax agreement {agree*100:.0f}%  "
+              f"max logit drift {drift*100:.1f}%  "
+              f"(write {arr.ledger.write_energy_j*1e3:.2f} mJ, "
+              f"{arr.ledger.mvm_count} analog MVMs)")
+
+
+if __name__ == "__main__":
+    main()

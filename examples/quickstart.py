@@ -1,0 +1,44 @@
+"""Quickstart: solve an LP on the simulated RRAM crossbar accelerator.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's full pipeline (Figure 1) in ~30 lines of user code:
+generate an instance -> enhanced PDHG on two simulated RRAM devices and
+the exact backend -> compare objective, iterations, energy.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import PDHGOptions, solve_jit                    # noqa: E402
+from repro.crossbar import EPIRAM, TAOX_HFOX, solve_crossbar_jit  # noqa: E402
+from repro.lp import random_standard_lp                          # noqa: E402
+
+
+def main():
+    # A standard-form LP with a known optimum (constructed via
+    # complementary slackness — no external solver needed).
+    lp = random_standard_lp(m=96, n=160, seed=0)   # fills the 256^2 crossbar
+    print(f"instance: K {lp.K.shape}, known optimum {lp.obj_opt:.6f}\n")
+
+    opts = PDHGOptions(max_iters=30000, tol=1e-6, check_every=100)
+
+    r = solve_jit(lp, opts)
+    print(f"exact PDHG    : obj={r.obj:.6f} "
+          f"rel_err={abs(r.obj - lp.obj_opt) / abs(lp.obj_opt):.2e} "
+          f"iters={r.iterations}")
+
+    for dev in (EPIRAM, TAOX_HFOX):
+        rep = solve_crossbar_jit(lp, opts, device=dev)
+        res, led = rep.result, rep.ledger
+        print(f"{dev.name:14s}: obj={res.obj:.6f} "
+              f"rel_err={abs(res.obj - lp.obj_opt) / abs(lp.obj_opt):.2e} "
+              f"iters={res.iterations} | energy: write "
+              f"{led.write_energy_j:.3f} J + read {led.read_energy_j:.3f} J"
+              f" | latency {led.total_latency_s:.3f} s")
+    print("\nNote how the encode-once write cost is amortized over ~60k "
+          "analog MVMs — the paper's core design point.")
+
+
+if __name__ == "__main__":
+    main()

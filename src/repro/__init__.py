@@ -1,0 +1,7 @@
+"""repro: distributed in-memory PDHG for large-scale LPs (+ LM substrate).
+
+Reproduction + TPU-native extension of "From GPUs to RRAMs: Distributed
+In-Memory Primal-Dual Hybrid Gradient Method for Solving Large-Scale
+Linear Optimization Problems" (CS.DC 2025).  See DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,45 @@
+# The paper's primary contribution: distributed in-memory PDHG for LPs.
+from .symblock import (
+    MODE_AX,
+    MODE_ATY,
+    MODE_FULL,
+    Accel,
+    as_dense,
+    build_sym_block,
+    encode_exact,
+    encode_noisy,
+    matmul_accel,
+    scaled_accel,
+)
+from .lanczos import LanczosResult, lanczos_svd, lanczos_svd_jit, power_iteration
+from .precondition import (
+    ScaledProblem,
+    apply_ruiz,
+    diagonal_precondition,
+    ruiz_rescale,
+)
+from .residuals import KKTResiduals, kkt_residuals, relative_error
+from .noise import NOISELESS, NoiseModel
+from .theory import (
+    SafeCoupling,
+    lemma2_worst_case,
+    safe_coupling,
+    spectral_ratio,
+    theorem1_envelope,
+    theorem2_envelope,
+)
+from .pdhg import PDHGOptions, PDHGResult, prepare, solve, solve_jit
+from .infeasibility import Certificate, check_farkas, difference_ray
+
+__all__ = [
+    "MODE_AX", "MODE_ATY", "MODE_FULL", "Accel", "as_dense",
+    "build_sym_block", "encode_exact", "encode_noisy", "matmul_accel",
+    "scaled_accel", "LanczosResult", "lanczos_svd", "lanczos_svd_jit",
+    "power_iteration", "ScaledProblem", "apply_ruiz",
+    "diagonal_precondition", "ruiz_rescale", "KKTResiduals",
+    "kkt_residuals", "relative_error", "NOISELESS", "NoiseModel",
+    "SafeCoupling", "lemma2_worst_case", "safe_coupling", "spectral_ratio",
+    "theorem1_envelope", "theorem2_envelope", "PDHGOptions", "PDHGResult",
+    "prepare", "solve", "solve_jit", "Certificate", "check_farkas",
+    "difference_ray",
+]

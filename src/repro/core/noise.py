@@ -1,0 +1,54 @@
+"""MVM perturbation models (paper §4, Assumptions 1-4).
+
+The analog accelerator returns  M v + zeta  where zeta is
+  * independent across iterations (Assumption 1),
+  * zero-mean / unbiased (Assumption 2),
+  * bounded (Assumption 3) with finite variance (Assumption 4).
+
+We provide the two families the paper analyzes:
+  multiplicative: w_i * (1 + sigma * g_i)   — models conductance C2C/D2D
+                  variability scaling with the signal,
+  additive:       w + sigma * scale * g     — models thermal/electronic
+                  read noise independent of the signal.
+
+Gaussians are truncated at ``clip`` std-devs so Assumption 3 (bounded)
+holds exactly; truncation at +-c of a symmetric density keeps zero mean.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    kind: str = "none"            # "none" | "multiplicative" | "additive"
+    sigma: float = 0.0            # relative noise scale
+    clip: float = 4.0             # truncation (std devs) => bounded noise
+
+    def apply(self, key, w):
+        if self.kind == "none" or self.sigma == 0.0:
+            return w
+        g = jax.random.normal(key, w.shape, dtype=w.dtype)
+        g = jnp.clip(g, -self.clip, self.clip)
+        if self.kind == "multiplicative":
+            return w * (1.0 + self.sigma * g)
+        if self.kind == "additive":
+            # scale to the RMS of the clean product so sigma is relative
+            scale = jnp.linalg.norm(w) / jnp.sqrt(jnp.asarray(w.size, w.dtype))
+            return w + self.sigma * scale * g
+        raise ValueError(self.kind)
+
+    def bound_delta(self, typical_norm: float = 1.0) -> float:
+        """delta of Assumption 3 for step-size safety margins (Lemma 2)."""
+        return float(self.sigma * self.clip * typical_norm)
+
+
+NOISELESS = NoiseModel()
+
+
+def make_apply(model: NoiseModel) -> Callable:
+    return model.apply

@@ -1,0 +1,421 @@
+"""Enhanced PDHG for LPs on in-memory accelerators (paper Algorithm 4).
+
+Iteration (sign convention of eq. 7; Algorithm 4 lists the equivalent
+negated-dual form — we keep eq. 7's so the KKT conditions (9)-(11) read
+canonically: K^T y <= c etc.):
+
+    theta_k = 1 / sqrt(1 + 2*gamma*tau)        # deterministic adaptation
+    tau    <- theta_k * tau;   sigma <- sigma / theta_k    # tau*sigma const
+    x_bar  = x_k + theta_k (x_k - x_{k-1})     # momentum extrapolation
+    y_{k+1} = y_k + sigma * Sigma ⊙ (b - K x_bar)          # 1 device MVM
+    x_{k+1} = proj_[lb,ub]( x_k - tau * T ⊙ (c - K^T y_{k+1}) )  # 1 device MVM
+
+Exactly two device MVMs per iteration, both against the SAME encoded
+symmetric block M (Algorithm 2 modes A@x and AT@y); all proximal and
+vector algebra stays on the host.  No K / K^T reprogramming ever happens
+after the single encode (Algorithm 1).
+
+Two drivers:
+  * ``solve``      — host loop over an arbitrary ``Accel`` (crossbar sim
+                     with energy ledger, noise keys, restart logic,
+                     infeasibility detection, residual history).
+  * ``solve_jit``  — jax.lax.while_loop, fully jitted on a dense K
+                     (the performance/distributed path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..lp.problem import StandardLP
+from . import precondition as precond_mod
+from .lanczos import lanczos_svd, lanczos_svd_jit
+from .noise import NOISELESS, NoiseModel
+from .residuals import KKTResiduals, kkt_residuals
+from .symblock import (
+    MODE_AX,
+    MODE_ATY,
+    Accel,
+    build_sym_block,
+    encode_exact,
+    encode_noisy,
+    matmul_accel,
+    scaled_accel,
+)
+
+
+@dataclasses.dataclass
+class PDHGOptions:
+    max_iters: int = 20000
+    tol: float = 1e-6
+    eta: float = 0.95              # safety margin (paper: eta ~ 0.95)
+    omega: float = 1.0             # primal weight (tau = eta/(omega L), sigma = eta omega/L)
+    gamma: float = 0.0             # Nesterov acceleration parameter (>=0)
+    ruiz_iters: int = 10
+    use_diag_precond: bool = True
+    lanczos_iters: int = 64
+    lanczos_tol: float = 1e-8
+    check_every: int = 64
+    restart: bool = True
+    restart_beta: float = 0.5      # restart when merit(avg) < beta * merit at last restart
+    infeasibility_detection: bool = True
+    seed: int = 0
+    dtype: np.dtype = np.float64
+    track_history: bool = False
+    norm_override: Optional[float] = None  # skip Lanczos (reuse across runs)
+
+
+@dataclasses.dataclass
+class PDHGResult:
+    status: str                 # "optimal" | "iteration_limit" | "infeasible?"
+    x: np.ndarray               # solution in ORIGINAL (unscaled) coordinates
+    y: np.ndarray
+    obj: float
+    iterations: int
+    residuals: KKTResiduals
+    sigma_max: float            # operator-norm estimate used
+    lanczos_iters: int
+    mvm_calls: int              # total device MVMs issued (energy ledger)
+    history: Optional[list] = None
+    restarts: int = 0
+    certificate: Optional[object] = None   # Farkas cert when diverged
+
+
+def _project(x, lb, ub):
+    return jnp.clip(x, lb, ub)
+
+
+def prepare(lp: StandardLP, opts: PDHGOptions):
+    """Step 0 of Algorithm 4: scaling, preconditioning (host)."""
+    dt = opts.dtype
+    scaled = precond_mod.apply_ruiz(
+        jnp.asarray(lp.K, dt), jnp.asarray(lp.b, dt), jnp.asarray(lp.c, dt),
+        jnp.asarray(lp.lb, dt), jnp.asarray(lp.ub, dt),
+        iters=opts.ruiz_iters,
+    )
+    if opts.use_diag_precond:
+        T, Sigma = precond_mod.diagonal_precondition(scaled.K)
+    else:
+        m, n = scaled.K.shape
+        T = jnp.ones(n, dt)
+        Sigma = jnp.ones(m, dt)
+    return scaled, T, Sigma
+
+
+def solve(
+    lp: StandardLP,
+    opts: PDHGOptions = PDHGOptions(),
+    accel_factory: Optional[Callable] = None,
+    noise: NoiseModel = NOISELESS,
+    on_iteration: Optional[Callable] = None,
+) -> PDHGResult:
+    """Algorithm 4 host driver over an arbitrary accelerator backend.
+
+    accel_factory(K_scaled) -> Accel.  Default: exact dense backend.
+    ``noise`` only applies to the default backends; a crossbar backend
+    brings its own device physics.
+    """
+    scaled, T, Sigma = prepare(lp, opts)
+    m, n = scaled.K.shape
+    key = jax.random.PRNGKey(opts.seed)
+
+    if accel_factory is None:
+        if noise.kind == "none":
+            accel = encode_exact(scaled.K)
+        else:
+            accel = encode_noisy(scaled.K, noise.apply)
+    else:
+        accel = accel_factory(scaled.K)
+    use_keys = noise.kind != "none" or accel.name.startswith("crossbar")
+
+    # ---- Step 1: operator-norm estimation on the PRECONDITIONED operator.
+    # M' = D M D with D = diag(sqrt(Sigma), sqrt(T)) is the symmetric block
+    # of Sigma^{1/2} K T^{1/2}; Lanczos on M' (host-side scaling wrap, no
+    # device rewrite) yields rho = ||Sigma^{1/2} K T^{1/2}||_2, and the
+    # convergence condition for diagonal steps (tau T, sigma Sigma) is
+    # tau*sigma*rho^2 < 1 (Lemma 2 with L := rho).
+    if opts.norm_override is not None:
+        rho = float(opts.norm_override)
+        lanczos_iters = 0
+    else:
+        wrapped = scaled_accel(accel, jnp.sqrt(Sigma), jnp.sqrt(T))
+        key, sub = jax.random.split(key)
+        lres = lanczos_svd(
+            wrapped, k_max=opts.lanczos_iters, tol=opts.lanczos_tol,
+            key=sub, reorthogonalize=True, noise_keys=use_keys,
+        )
+        rho = lres.sigma_max
+        lanczos_iters = lres.iterations
+
+    tau = opts.eta / (opts.omega * rho)
+    sigma = opts.eta * opts.omega / rho
+
+    # ---- Step 2: initialization (paper: projected Gaussian start).
+    key, kx, ky = jax.random.split(key, 3)
+    x = _project(jax.random.normal(kx, (n,), dtype=scaled.K.dtype),
+                 scaled.lb, scaled.ub)
+    y = jax.random.normal(ky, (m,), dtype=scaled.K.dtype)
+    x_prev = x
+    # running ergodic sums for restarts / averaged iterate
+    x_sum = jnp.zeros_like(x)
+    y_sum = jnp.zeros_like(y)
+    avg_len = 0
+    merit_at_restart = np.inf
+    n_restarts = 0
+
+    history = [] if opts.track_history else None
+    status = "iteration_limit"
+    res = None
+    it = 0
+
+    for it in range(opts.max_iters):
+        theta_k = 1.0 / np.sqrt(1.0 + 2.0 * opts.gamma * tau)
+        tau = theta_k * tau
+        sigma = sigma / theta_k
+        x_bar = x + theta_k * (x - x_prev)
+
+        if use_keys:
+            key, k1, k2 = jax.random.split(key, 3)
+        else:
+            k1 = k2 = None
+        Kxbar = matmul_accel(accel, x_bar, MODE_AX, key=k1)
+        y = y + sigma * Sigma * (scaled.b - Kxbar)
+        x_prev = x
+        KTy = matmul_accel(accel, y, MODE_ATY, key=k2)
+        x = _project(x - tau * T * (scaled.c - KTy), scaled.lb, scaled.ub)
+
+        x_sum = x_sum + x
+        y_sum = y_sum + y
+        avg_len += 1
+
+        if (it + 1) % opts.check_every == 0 or it == opts.max_iters - 1:
+            if use_keys:
+                key, k3, k4 = jax.random.split(key, 3)
+            else:
+                k3 = k4 = None
+            Kx = matmul_accel(accel, x, MODE_AX, key=k3)
+            KTy_c = matmul_accel(accel, y, MODE_ATY, key=k4)
+            res = kkt_residuals(
+                x, x_prev, y, scaled.c, scaled.b, Kx, KTy_c,
+                lb=scaled.lb, ub=scaled.ub,
+            )
+            merit = float(res.max)
+            if history is not None:
+                history.append(
+                    {"iter": it + 1, "merit": merit, **res.as_dict(),
+                     "obj": float(jnp.vdot(scaled.c, x))}
+                )
+            if on_iteration is not None:
+                on_iteration(it + 1, merit, accel)
+            if merit <= opts.tol:
+                status = "optimal"
+                break
+            if opts.infeasibility_detection and merit > 1e8:
+                status = "diverged"
+                break
+            if opts.restart and avg_len > 0:
+                x_avg = x_sum / avg_len
+                y_avg = y_sum / avg_len
+                Kxa = matmul_accel(accel, x_avg, MODE_AX, key=k3)
+                KTya = matmul_accel(accel, y_avg, MODE_ATY, key=k4)
+                res_avg = kkt_residuals(
+                    x_avg, x_avg, y_avg, scaled.c, scaled.b, Kxa, KTya,
+                    lb=scaled.lb, ub=scaled.ub,
+                )
+                merit_avg = float(res_avg.max)
+                if merit_avg < opts.restart_beta * merit_at_restart:
+                    # restart from the (better) averaged iterate
+                    if merit_avg < merit:
+                        x = x_avg
+                        y = y_avg
+                        x_prev = x
+                    merit_at_restart = min(merit_avg, merit)
+                    x_sum = jnp.zeros_like(x)
+                    y_sum = jnp.zeros_like(y)
+                    avg_len = 0
+                    n_restarts += 1
+
+    x_orig = np.asarray(scaled.unscale_x(x))
+    y_orig = np.asarray(scaled.unscale_y(y))
+    if res is None:
+        Kx = matmul_accel(accel, x, MODE_AX)
+        KTy_c = matmul_accel(accel, y, MODE_ATY)
+        res = kkt_residuals(x, x, y, scaled.c, scaled.b, Kx, KTy_c,
+                            lb=scaled.lb, ub=scaled.ub)
+    certificate = None
+    if status == "diverged" and opts.infeasibility_detection:
+        # PDHG's dual iterate diverges along a Farkas ray on primal-
+        # infeasible instances [51]; the diagonal rescaling preserves
+        # certificates (K~^T y~ <= 0 <=> K^T (D1 y~) <= 0 for D2 > 0).
+        from .infeasibility import check_farkas
+
+        cert = check_farkas(np.asarray(lp.K), np.asarray(lp.b), y_orig,
+                            tol=1e-5)
+        if cert.kind != "none":
+            status = "primal_infeasible"
+            certificate = cert
+    return PDHGResult(
+        status=status,
+        x=x_orig,
+        y=y_orig,
+        obj=float(lp.c @ x_orig),
+        iterations=it + 1,
+        residuals=res,
+        sigma_max=rho,
+        lanczos_iters=lanczos_iters,
+        mvm_calls=accel.stats["mvm_calls"],
+        history=history,
+        restarts=n_restarts,
+        certificate=certificate,
+    )
+
+
+# --------------------------------------------------------------------------
+# Fully-jitted dense solver (performance path; same math, fixed iteration
+# batches with residual-based early exit via lax.while_loop).
+# --------------------------------------------------------------------------
+
+def _solve_jit_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key,
+                    opts_static):
+    """K_fwd ~ K (dual step), K_adj ~ K^T (primal step).
+
+    On an ideal backend K_adj == K_fwd.T; on a programmed crossbar the two
+    blocks of M are physically distinct cells, so they carry independent
+    programming error.  ``sigma_read`` > 0 adds multiplicative
+    cycle-to-cycle read noise per MVM (Assumptions 1-4).
+    """
+    (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
+     sigma_read) = opts_static
+    m, n = K_fwd.shape
+    dt = K_fwd.dtype
+    tau0 = eta / (omega * rho)
+    sigma0 = eta * omega / rho
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    x0 = jnp.clip(jax.random.normal(kx, (n,), dt), lb, ub)
+    y0 = jax.random.normal(ky, (m,), dt)
+
+    def mvm_fwd(v, key):
+        w = K_fwd @ v
+        if sigma_read > 0.0:
+            g = jnp.clip(jax.random.normal(key, w.shape, dt), -4.0, 4.0)
+            w = w * (1.0 + sigma_read * g)
+        return w
+
+    def mvm_adj(v, key):
+        w = K_adj @ v
+        if sigma_read > 0.0:
+            g = jnp.clip(jax.random.normal(key, w.shape, dt), -4.0, 4.0)
+            w = w * (1.0 + sigma_read * g)
+        return w
+
+    def half_iter(_, state):
+        x, x_prev, y, tau, sigma, xs, ys, cnt, rk = state
+        rk, k1, k2 = jax.random.split(rk, 3)
+        theta_k = 1.0 / jnp.sqrt(1.0 + 2.0 * gamma * tau)
+        tau_n = theta_k * tau
+        sigma_n = sigma / theta_k
+        x_bar = x + theta_k * (x - x_prev)
+        y_n = y + sigma_n * Sigma * (b - mvm_fwd(x_bar, k1))
+        x_n = jnp.clip(x - tau_n * T * (c - mvm_adj(y_n, k2)), lb, ub)
+        return (x_n, x, y_n, tau_n, sigma_n, xs + x_n, ys + y_n, cnt + 1.0, rk)
+
+    def merit_of(x, x_prev, y):
+        # residual check on the same (noisy) accelerator products
+        return kkt_residuals(x, x_prev, y, c, b, K_fwd @ x, K_adj @ y,
+                             lb=lb, ub=ub).max
+
+    def body(state):
+        (x, x_prev, y, tau, sigma, it, merit, xs, ys, cnt, m_restart,
+         rk) = state
+        inner = jax.lax.fori_loop(
+            0, check_every, half_iter,
+            (x, x_prev, y, tau, sigma, xs, ys, cnt, rk)
+        )
+        x, x_prev, y, tau, sigma, xs, ys, cnt, rk = inner
+        merit = merit_of(x, x_prev, y)
+        # adaptive restart on the ergodic average (PDLP-style)
+        x_avg = xs / jnp.maximum(cnt, 1.0)
+        y_avg = ys / jnp.maximum(cnt, 1.0)
+        merit_avg = merit_of(x_avg, x_avg, y_avg)
+        do_restart = merit_avg < restart_beta * m_restart
+        use_avg = jnp.logical_or(
+            jnp.logical_and(do_restart, merit_avg < merit),
+            merit_avg <= tol,   # adopt the average if it already satisfies tol
+        )
+        x = jnp.where(use_avg, x_avg, x)
+        y = jnp.where(use_avg, y_avg, y)
+        x_prev = jnp.where(use_avg, x_avg, x_prev)
+        m_restart = jnp.where(do_restart, jnp.minimum(merit_avg, merit),
+                              m_restart)
+        xs = jnp.where(do_restart, jnp.zeros_like(xs), xs)
+        ys = jnp.where(do_restart, jnp.zeros_like(ys), ys)
+        cnt = jnp.where(do_restart, 0.0, cnt)
+        merit = jnp.minimum(merit, merit_avg)
+        return (x, x_prev, y, tau, sigma, it + check_every, merit, xs, ys,
+                cnt, m_restart, rk)
+
+    def cond(state):
+        it, merit = state[5], state[6]
+        return jnp.logical_and(it < max_iters, merit > tol)
+
+    init = (x0, x0, y0, jnp.asarray(tau0, dt), jnp.asarray(sigma0, dt),
+            jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dt),
+            jnp.zeros_like(x0), jnp.zeros_like(y0), jnp.asarray(0.0, dt),
+            jnp.asarray(jnp.inf, dt), key)
+    out = jax.lax.while_loop(cond, body, init)
+    x, _, y, _, _, it, merit = out[:7]
+    return x, y, it, merit
+
+
+def solve_jit(
+    lp: StandardLP,
+    opts: PDHGOptions = PDHGOptions(),
+    K_fwd=None,
+    K_adj=None,
+    sigma_read: float = 0.0,
+) -> PDHGResult:
+    """Jitted dense-K solver: Ruiz + PC precond + Lanczos + while_loop.
+
+    ``K_fwd``/``K_adj`` override the operator actually *executed* (e.g. the
+    decoded programmed crossbar blocks, already in the Ruiz-scaled frame);
+    preconditioning and residual scaling still derive from the nominal K.
+    ``sigma_read`` adds multiplicative per-MVM read noise inside the loop.
+    """
+    scaled, T, Sigma = prepare(lp, opts)
+    Kf = scaled.K if K_fwd is None else jnp.asarray(K_fwd, scaled.K.dtype)
+    Ka = Kf.T if K_adj is None else jnp.asarray(K_adj, scaled.K.dtype)
+    if opts.norm_override is not None:
+        rho = jnp.asarray(opts.norm_override, scaled.K.dtype)
+    else:
+        Keff = jnp.sqrt(Sigma)[:, None] * Kf * jnp.sqrt(T)[None, :]
+        rho = lanczos_svd_jit(build_sym_block(Keff), k_max=opts.lanczos_iters)
+        if sigma_read > 0.0:
+            # Lemma 2 safety: widen the margin by the noise bound so the
+            # coupling holds for the true norm despite the noisy estimate.
+            rho = rho / (1.0 - min(4.0 * sigma_read, 0.5))
+    static = (opts.max_iters, opts.tol, opts.eta, opts.omega, opts.gamma,
+              opts.check_every,
+              opts.restart_beta if opts.restart else 0.0,
+              float(sigma_read))
+    core = jax.jit(_solve_jit_core, static_argnums=(10,))
+    x, y, it, merit = core(
+        Kf, Ka, scaled.b, scaled.c, scaled.lb, scaled.ub, T, Sigma, rho,
+        jax.random.PRNGKey(opts.seed + 1), static,
+    )
+    x_orig = np.asarray(scaled.unscale_x(x))
+    y_orig = np.asarray(scaled.unscale_y(y))
+    res = kkt_residuals(
+        x, x, y, scaled.c, scaled.b, scaled.K @ x, scaled.K.T @ y,
+        lb=scaled.lb, ub=scaled.ub,
+    )
+    return PDHGResult(
+        status="optimal" if float(merit) <= opts.tol else "iteration_limit",
+        x=x_orig, y=y_orig, obj=float(lp.c @ x_orig),
+        iterations=int(it), residuals=res, sigma_max=float(rho),
+        lanczos_iters=opts.lanczos_iters,
+        mvm_calls=2 * int(it),
+    )

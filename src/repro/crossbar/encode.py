@@ -1,0 +1,107 @@
+"""Conductance encoding with write-verify (paper §3.1 + ref [40]).
+
+RRAM conductances are non-negative, so a real matrix W is stored as a
+differential pair  W ~ s * (G+ - G-)  with
+    G+ = quantize(max(W, 0) / s),   G- = quantize(max(-W, 0) / s),
+where s scales max|W| onto the device's usable conductance range (we work
+in normalized conductance units g in [0, 1] with ``g_levels`` steps).
+
+Write-verify: each cell is pulsed until its conductance is within half an
+LSB of target; the residual error is modeled as a zero-mean Gaussian with
+relative std ``sigma_program`` (device-to-device variability floor).  The
+expected pulse count per cell drives the programming energy/latency ledger
+entries — this is the "expensive writes" the encode-once strategy
+amortizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .device import DeviceModel
+from .energy import Ledger
+
+
+@dataclasses.dataclass
+class EncodedMatrix:
+    g_pos: jnp.ndarray      # (R, C) normalized conductances in [0, 1]
+    g_neg: jnp.ndarray
+    scale: float            # W ~ scale * (g_pos - g_neg)
+    rows: int               # logical (unpadded) shape
+    cols: int
+    device: DeviceModel
+    fill: float = 1.0       # fraction of programmed (nonzero) cells —
+                            # zero-conductance cells draw ~no read current
+
+    def decode(self) -> jnp.ndarray:
+        return (self.g_pos - self.g_neg)[: self.rows, : self.cols] * self.scale
+
+    @property
+    def active_cells(self) -> float:
+        return 2.0 * self.g_pos.shape[0] * self.g_pos.shape[1] * self.fill
+
+
+def _quantize(g: jnp.ndarray, levels: int) -> jnp.ndarray:
+    return jnp.round(g * (levels - 1)) / (levels - 1)
+
+
+def encode_matrix(
+    W,
+    device: DeviceModel,
+    key: jax.Array,
+    ledger: Ledger | None = None,
+    pad_to_tiles: bool = True,
+) -> EncodedMatrix:
+    """Program W onto (padded) crossbar tiles with write-verify."""
+    W = jnp.asarray(W)
+    rows, cols = W.shape
+    tr, tc = device.crossbar_rows, device.crossbar_cols
+    if pad_to_tiles:
+        R = int(np.ceil(rows / tr)) * tr
+        C = int(np.ceil(cols / tc)) * tc
+        Wp = jnp.zeros((R, C), W.dtype).at[:rows, :cols].set(W)
+    else:
+        R, C = rows, cols
+        Wp = W
+    scale = float(jnp.max(jnp.abs(Wp))) or 1.0
+    g_pos_t = jnp.maximum(Wp, 0.0) / scale
+    g_neg_t = jnp.maximum(-Wp, 0.0) / scale
+    g_pos_q = _quantize(g_pos_t, device.g_levels)
+    g_neg_q = _quantize(g_neg_t, device.g_levels)
+    k1, k2 = jax.random.split(key)
+    # residual programming error (relative, only on nonzero cells)
+    e1 = 1.0 + device.sigma_program * jax.random.normal(k1, g_pos_q.shape, W.dtype)
+    e2 = 1.0 + device.sigma_program * jax.random.normal(k2, g_neg_q.shape, W.dtype)
+    g_pos = jnp.clip(g_pos_q * e1, 0.0, 1.0)
+    g_neg = jnp.clip(g_neg_q * e2, 0.0, 1.0)
+
+    nz = int(jnp.sum((g_pos_t > 0) | (g_neg_t > 0)))
+    fill = nz / (R * C)
+    if ledger is not None:
+        # only nonzero targets consume verify pulses; zeros need a RESET
+        # pulse each (cheap, count one pulse)
+        zeros = 2 * R * C - 2 * nz
+        pulses = nz * 2 * device.avg_write_pulses + zeros * 1.0
+        ledger.write_energy_j += pulses * device.write_pulse_energy_j
+        # tiles program in parallel; within a tile, cells are row-serial
+        cells_per_tile = tr * tc * 2
+        ledger.write_latency_s += (
+            cells_per_tile * max(fill, 1.0 / (tr * tc))
+            * device.avg_write_pulses * device.write_pulse_latency_s
+        )
+        ledger.cells_written += 2 * R * C
+    return EncodedMatrix(
+        g_pos=g_pos, g_neg=g_neg, scale=scale, rows=rows, cols=cols,
+        device=device, fill=fill,
+    )
+
+
+def write_verify_error(enc: EncodedMatrix, W) -> float:
+    """Max relative deviation between programmed and target matrix."""
+    W = jnp.asarray(W)
+    err = jnp.abs(enc.decode() - W)
+    return float(jnp.max(err) / (jnp.max(jnp.abs(W)) + 1e-30))

@@ -1,0 +1,56 @@
+"""Per-phase energy/latency ledger (shape of paper Tables 4-5).
+
+The ledger accumulates WRITE (programming, once) and READ (per analog MVM)
+costs for RRAM backends, and H2D/SOLVE/D2H costs for the GPU baseline.
+``snapshot()``/``diff()`` let the benchmark harness split Lanczos-phase vs
+PDHG-phase totals exactly like the paper's tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Ledger:
+    # RRAM phases
+    write_energy_j: float = 0.0
+    write_latency_s: float = 0.0
+    read_energy_j: float = 0.0
+    read_latency_s: float = 0.0
+    # GPU phases
+    h2d_energy_j: float = 0.0
+    h2d_latency_s: float = 0.0
+    solve_energy_j: float = 0.0
+    solve_latency_s: float = 0.0
+    d2h_energy_j: float = 0.0
+    d2h_latency_s: float = 0.0
+    # counters
+    mvm_count: int = 0
+    cells_written: int = 0
+
+    @property
+    def total_energy_j(self) -> float:
+        return (self.write_energy_j + self.read_energy_j + self.h2d_energy_j
+                + self.solve_energy_j + self.d2h_energy_j)
+
+    @property
+    def total_latency_s(self) -> float:
+        return (self.write_latency_s + self.read_latency_s
+                + self.h2d_latency_s + self.solve_latency_s
+                + self.d2h_latency_s)
+
+    def snapshot(self) -> "Ledger":
+        return dataclasses.replace(self)
+
+    def diff(self, earlier: "Ledger") -> "Ledger":
+        out = Ledger()
+        for f in dataclasses.fields(Ledger):
+            setattr(out, f.name,
+                    getattr(self, f.name) - getattr(earlier, f.name))
+        return out
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["total_energy_j"] = self.total_energy_j
+        d["total_latency_s"] = self.total_latency_s
+        return d

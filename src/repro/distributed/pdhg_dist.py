@@ -1,0 +1,296 @@
+"""Distributed in-memory PDHG via shard_map (DESIGN.md §4).
+
+The device mesh is the crossbar grid: each device owns a static tile of
+the Ruiz-scaled constraint matrix K (equivalently, of the symmetric block
+M — K row/col tiles and their transposes are the SAME buffers read both
+ways, so the encode-once property survives sharding).  Per iteration:
+
+  dual step   K @ x_bar : local (m_loc, n_loc) @ (n_loc,) then
+              psum over the COLUMN axis ("model")     — "sum the currents"
+  primal step K^T @ y   : local transpose-read then
+              psum over the ROW axes ("pod","data")
+
+Vectors are the only thing that ever moves (two small psums per
+iteration); K is written once at setup.  This is the paper's
+communication pattern mapped onto jax.lax collectives.
+
+Exposes:
+  * ``make_dist_step``  — jitted k-iteration step (dry-run / roofline unit)
+  * ``solve_dist``      — full solver: pad, shard, while_loop with KKT
+                          checks + adaptive restarts, unscale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..core import pdhg as pdhg_mod
+from ..core.pdhg import PDHGOptions, PDHGResult
+from ..core.residuals import KKTResiduals
+from ..lp.problem import StandardLP
+from .sharding import axis_size, col_axes, pad_to_multiple, row_axes
+
+
+def _l2sq(v):
+    return jnp.sum(v * v)
+
+
+def _dist_kkt_max(x, x_prev, y, c, b, Kx, KTy, lb, ub, Rax, Cax):
+    """max KKT residual, computed from local blocks + scalar psums.
+
+    x-like vectors are sharded over Cax, y-like over Rax.  Every sum is a
+    local reduction followed by a psum over the owning axis, so the result
+    is identical on all devices (drives collective-free control flow).
+    """
+    sum_c = lambda v: jax.lax.psum(v, Cax)      # noqa: E731
+    sum_r = lambda v: jax.lax.psum(v, Rax)      # noqa: E731
+    reduced = c - KTy
+    has_lb = jnp.isfinite(lb)
+    has_ub = jnp.isfinite(ub)
+    lam_lo = jnp.where(has_lb, jnp.maximum(reduced, 0.0), 0.0)
+    lam_hi = jnp.where(has_ub, jnp.maximum(-reduced, 0.0), 0.0)
+    lam = lam_lo - lam_hi
+    nrm_b = jnp.sqrt(sum_r(_l2sq(b)))
+    nrm_c = jnp.sqrt(sum_c(_l2sq(c)))
+    r_pri = jnp.sqrt(sum_r(_l2sq(Kx - b))) / (1.0 + nrm_b)
+    r_dual = jnp.sqrt(sum_c(_l2sq(reduced - lam))) / (1.0 + nrm_c)
+    r_iter = jnp.sqrt(sum_c(_l2sq(jnp.maximum(x_prev - x, 0.0)))) / (
+        1.0 + jnp.sqrt(sum_c(_l2sq(x))))
+    pobj = sum_c(jnp.vdot(c, x))
+    dobj = sum_r(jnp.vdot(b, y)) + sum_c(
+        jnp.vdot(jnp.where(has_lb, lb, 0.0), lam_lo)
+        - jnp.vdot(jnp.where(has_ub, ub, 0.0), lam_hi))
+    r_gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
+    return jnp.maximum(jnp.maximum(r_pri, r_dual), jnp.maximum(r_iter, r_gap))
+
+
+def _tile_mv(K_loc, v):
+    """Tile MVM in the tile dtype with f32 accumulation.
+
+    When K tiles are bf16 (the TPU analogue of conductance quantization —
+    hillclimb 1), the input vector is cast down so the dot reads bf16
+    operands end-to-end; accumulation stays f32 (MXU native).
+    """
+    return jax.lax.dot_general(
+        K_loc, v.astype(K_loc.dtype),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _tile_mv_t(K_loc, v):
+    return jax.lax.dot_general(
+        K_loc, v.astype(K_loc.dtype),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _iteration(K_loc, b_loc, c_loc, lb_loc, ub_loc, T_loc, Sig_loc,
+               Rax, Cax, gamma, state):
+    x, x_prev, y, tau, sigma = state
+    theta_k = 1.0 / jnp.sqrt(1.0 + 2.0 * gamma * tau)
+    tau_n = theta_k * tau
+    sigma_n = sigma / theta_k
+    x_bar = x + theta_k * (x - x_prev)
+    # dual step: Kx_bar = psum_cols(K_loc @ x_bar_loc)
+    Kxb = jax.lax.psum(_tile_mv(K_loc, x_bar).astype(x.dtype), Cax)
+    y_n = y + sigma_n * Sig_loc * (b_loc - Kxb)
+    # primal step: K^T y = psum_rows(K_loc^T @ y_loc)
+    KTy = jax.lax.psum(_tile_mv_t(K_loc, y_n).astype(x.dtype), Rax)
+    x_n = jnp.clip(x - tau_n * T_loc * (c_loc - KTy), lb_loc, ub_loc)
+    return (x_n, x, y_n, tau_n, sigma_n)
+
+
+@dataclasses.dataclass
+class DistProblem:
+    """Padded + device-laid-out problem data (the 'encoded' state)."""
+
+    K: jax.Array         # (m_pad, n_pad) sharded P(Rax, Cax)
+    b: jax.Array         # (m_pad,)  P(Rax)
+    c: jax.Array         # (n_pad,)  P(Cax)
+    lb: jax.Array
+    ub: jax.Array
+    T: jax.Array
+    Sigma: jax.Array
+    m: int               # original dims
+    n: int
+    mesh: Mesh
+
+
+def shard_problem(scaled, T, Sigma, mesh: Mesh,
+                  tile_dtype=None) -> DistProblem:
+    """Pad to mesh multiples and place blocks (the encode-once step).
+
+    Padding semantics: extra primal coordinates are pinned (lb=ub=0) and
+    extra rows have b=0 with zero K rows, so padding never changes the
+    optimum.  ``tile_dtype`` downcasts the device-resident K tiles
+    (hillclimb 1: bf16 "conductances"); vectors keep the solve dtype.
+    """
+    Rax, Cax = row_axes(mesh), col_axes(mesh)
+    R, C = axis_size(mesh, Rax), axis_size(mesh, Cax)
+    m, n = scaled.K.shape
+    Kp = pad_to_multiple(pad_to_multiple(scaled.K, R, 0), C, 1)
+    if tile_dtype is not None:
+        Kp = Kp.astype(tile_dtype)
+    bp = pad_to_multiple(scaled.b, R, 0)
+    cp = pad_to_multiple(scaled.c, C, 0)
+    lbp = pad_to_multiple(scaled.lb, C, 0)
+    ubp = pad_to_multiple(scaled.ub, C, 0)   # pad ub with 0 => pinned vars
+    Tp = pad_to_multiple(T, C, 0, value=1.0)
+    Sigp = pad_to_multiple(Sigma, R, 0, value=1.0)
+    put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))  # noqa: E731
+    return DistProblem(
+        K=put(Kp, P(Rax, Cax)),
+        b=put(bp, P(Rax)),
+        c=put(cp, P(Cax)),
+        lb=put(lbp, P(Cax)),
+        ub=put(ubp, P(Cax)),
+        T=put(Tp, P(Cax)),
+        Sigma=put(Sigp, P(Rax)),
+        m=m, n=n, mesh=mesh,
+    )
+
+
+def make_dist_step(mesh: Mesh, n_inner: int = 1, gamma: float = 0.0):
+    """k-iteration distributed PDHG step (the dry-run/roofline unit).
+
+    Returns a function  (K, b, c, lb, ub, T, Sigma, x, x_prev, y, tau,
+    sigma) -> (x, x_prev, y, tau, sigma)  running ``n_inner`` iterations.
+    """
+    Rax, Cax = row_axes(mesh), col_axes(mesh)
+
+    def local_fn(K, b, c, lb, ub, T, Sig, x, x_prev, y, tau, sigma):
+        it = functools.partial(_iteration, K, b, c, lb, ub, T, Sig,
+                               Rax, Cax, gamma)
+        state = (x, x_prev, y, tau, sigma)
+        state = jax.lax.fori_loop(0, n_inner, lambda i, s: it(s), state)
+        return state
+
+    vec_r, vec_c = P(Rax), P(Cax)
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(Rax, Cax), vec_r, vec_c, vec_c, vec_c, vec_c, vec_r,
+                  vec_c, vec_c, vec_r, P(), P()),
+        out_specs=(vec_c, vec_c, vec_r, P(), P()),
+        check_vma=False,
+    )
+
+
+def solve_dist(
+    lp: StandardLP,
+    mesh: Mesh,
+    opts: PDHGOptions = PDHGOptions(),
+    tile_dtype=None,
+) -> PDHGResult:
+    """Full distributed solve (host prep -> shard -> jitted while_loop)."""
+    scaled, T, Sigma = pdhg_mod.prepare(lp, opts)
+    if opts.norm_override is not None:
+        rho = float(opts.norm_override)
+    else:
+        from ..core.lanczos import lanczos_svd_jit
+        from ..core.symblock import build_sym_block
+        Keff = jnp.sqrt(Sigma)[:, None] * scaled.K * jnp.sqrt(T)[None, :]
+        rho = float(lanczos_svd_jit(build_sym_block(Keff),
+                                    k_max=opts.lanczos_iters))
+        if tile_dtype is not None:
+            rho = rho / (1.0 - 0.05)   # Lemma-2 margin for tile rounding
+    prob = shard_problem(scaled, T, Sigma, mesh, tile_dtype=tile_dtype)
+    Rax, Cax = row_axes(mesh), col_axes(mesh)
+    n_pad = prob.c.shape[0]
+    m_pad = prob.b.shape[0]
+    dt = prob.b.dtype   # vector dtype (tiles may be bf16)
+
+    def local_solve(K, b, c, lb, ub, T, Sig):
+        kx, ky = jax.random.split(jax.random.PRNGKey(opts.seed))
+        # deterministic init: every device draws the FULL vector then
+        # slices its block => identical math to the single-device solver.
+        ci = jax.lax.axis_index(Cax)
+        ri = jax.lax.axis_index(Rax)
+        nloc, mloc = c.shape[0], b.shape[0]
+        x0f = jax.random.normal(kx, (n_pad,), dt)
+        y0f = jax.random.normal(ky, (m_pad,), dt)
+        x = jnp.clip(jax.lax.dynamic_slice(x0f, (ci * nloc,), (nloc,)), lb, ub)
+        y = jax.lax.dynamic_slice(y0f, (ri * mloc,), (mloc,))
+        tau = jnp.asarray(opts.eta / (opts.omega * rho), dt)
+        sigma = jnp.asarray(opts.eta * opts.omega / rho, dt)
+        it_fn = functools.partial(_iteration, K, b, c, lb, ub, T, Sig,
+                                  Rax, Cax, opts.gamma)
+
+        def merit_of(x, x_prev, y):
+            Kx = jax.lax.psum(_tile_mv(K, x).astype(x.dtype), Cax)
+            KTy = jax.lax.psum(_tile_mv_t(K, y).astype(x.dtype), Rax)
+            return _dist_kkt_max(x, x_prev, y, c, b, Kx, KTy, lb, ub,
+                                 Rax, Cax)
+
+        def body(state):
+            (x, x_prev, y, tau, sigma, it, merit, xs, ys, cnt,
+             m_restart) = state
+            inner = jax.lax.fori_loop(
+                0, opts.check_every,
+                lambda i, s: it_fn(s[:5]) + (s[5] + x, s[6] + y, s[7] + 1.0),
+                (x, x_prev, y, tau, sigma, xs, ys, cnt),
+            )
+            x, x_prev, y, tau, sigma, xs, ys, cnt = inner
+            merit = merit_of(x, x_prev, y)
+            x_avg = xs / jnp.maximum(cnt, 1.0)
+            y_avg = ys / jnp.maximum(cnt, 1.0)
+            merit_avg = merit_of(x_avg, x_avg, y_avg)
+            beta = opts.restart_beta if opts.restart else 0.0
+            do_restart = merit_avg < beta * m_restart
+            use_avg = jnp.logical_or(
+                jnp.logical_and(do_restart, merit_avg < merit),
+                merit_avg <= opts.tol)
+            x = jnp.where(use_avg, x_avg, x)
+            y = jnp.where(use_avg, y_avg, y)
+            x_prev = jnp.where(use_avg, x_avg, x_prev)
+            m_restart = jnp.where(do_restart,
+                                  jnp.minimum(merit_avg, merit), m_restart)
+            xs = jnp.where(do_restart, jnp.zeros_like(xs), xs)
+            ys = jnp.where(do_restart, jnp.zeros_like(ys), ys)
+            cnt = jnp.where(do_restart, 0.0, cnt)
+            merit = jnp.minimum(merit, merit_avg)
+            return (x, x_prev, y, tau, sigma, it + opts.check_every, merit,
+                    xs, ys, cnt, m_restart)
+
+        def cond(state):
+            return jnp.logical_and(state[5] < opts.max_iters,
+                                   state[6] > opts.tol)
+
+        init = (x, x, y, tau, sigma, jnp.asarray(0, jnp.int32),
+                jnp.asarray(jnp.inf, dt), jnp.zeros_like(x),
+                jnp.zeros_like(y), jnp.asarray(0.0, dt),
+                jnp.asarray(jnp.inf, dt))
+        out = jax.lax.while_loop(cond, body, init)
+        x, _, y, _, _, it, merit = out[:7]
+        return x, y, it, merit
+
+    vec_r, vec_c = P(Rax), P(Cax)
+    solve_fn = jax.jit(jax.shard_map(
+        local_solve,
+        mesh=mesh,
+        in_specs=(P(Rax, Cax), vec_r, vec_c, vec_c, vec_c, vec_c, vec_r),
+        out_specs=(vec_c, vec_r, P(), P()),
+        check_vma=False,
+    ))
+    x, y, it, merit = solve_fn(prob.K, prob.b, prob.c, prob.lb, prob.ub,
+                               prob.T, prob.Sigma)
+    x = np.asarray(x)[: prob.n]
+    y = np.asarray(y)[: prob.m]
+    x_orig = np.asarray(scaled.D2) * x
+    y_orig = np.asarray(scaled.D1) * y
+    res_obj = KKTResiduals(*([jnp.asarray(float(merit))] * 4))
+    return PDHGResult(
+        status="optimal" if float(merit) <= opts.tol else "iteration_limit",
+        x=x_orig, y=y_orig, obj=float(lp.c @ x_orig),
+        iterations=int(it), residuals=res_obj, sigma_max=rho,
+        lanczos_iters=opts.lanczos_iters, mvm_calls=2 * int(it),
+    )

@@ -1,0 +1,54 @@
+"""Mesh/sharding vocabulary shared by the LP solver and the LM stack.
+
+Axis conventions (DESIGN.md §4):
+  single pod : mesh (16, 16) with axes ("data", "model")
+  multi-pod  : mesh (2, 16, 16) with axes ("pod", "data", "model")
+
+For the distributed PDHG solver the device grid IS the crossbar grid:
+row-blocks of the symmetric block M live on the "data" axis (and "pod",
+when present), col-blocks on "model".  A K x product is a local tile
+matmul + psum over the column axis — the digital twin of the paper's
+"sum the output currents along a crossbar grid row".
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def row_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes carrying row-blocks of M/K ("pod" folds into rows when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def col_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("model",)
+
+
+def axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def pad_to_multiple(x, mult: int, axis: int = 0, value: float = 0.0):
+    import jax.numpy as jnp
+
+    size = x.shape[axis]
+    target = math.ceil(size / mult) * mult
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def padded_dim(size: int, parts: int) -> int:
+    return math.ceil(size / parts) * parts

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   crossbar_mvm  — the analog MVM (the operation the paper accelerates),
+#                   as a tiled differential-pair MXU matmul.
+#   pdhg_update   — fused primal/dual vector updates (single VMEM pass).
+# Validated in interpret=True mode on CPU against ref.py oracles.
+from . import crossbar_mvm, ops, pdhg_update, ref
+
+__all__ = ["crossbar_mvm", "ops", "pdhg_update", "ref"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-for-shape identical)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def crossbar_mvm_ref(g_pos, g_neg, v, gain):
+    """w = gain ⊙ ((G+ − G−) @ v); v (C,1), gain (R,1) -> (R,1)."""
+    return gain * ((g_pos - g_neg) @ v)
+
+
+def primal_update_ref(x, kty, c, T, lb, ub, tau, theta):
+    tau = jnp.asarray(tau).reshape(())
+    theta = jnp.asarray(theta).reshape(())
+    x_new = jnp.clip(x - tau * T * (c - kty), lb, ub)
+    x_bar = x_new + theta * (x_new - x)
+    return x_new, x_bar
+
+
+def dual_update_ref(y, kxbar, b, Sigma, sigma):
+    sigma = jnp.asarray(sigma).reshape(())
+    return y + sigma * Sigma * (b - kxbar)

@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/solve drivers.
+
+NOTE: ``dryrun`` must be imported/run as the FIRST jax-touching module of
+its process (it sets XLA_FLAGS for 512 host devices at import).  Do not
+import it from library code.
+"""
+from .mesh import make_mesh, make_production_mesh
+
+__all__ = ["make_mesh", "make_production_mesh"]

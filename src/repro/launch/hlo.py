@@ -1,0 +1,286 @@
+"""HLO-text analysis: collective traffic extraction for the roofline.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the
+compiled (post-SPMD) HLO and sum the output-shape bytes of every
+collective op.  Conventions (documented in EXPERIMENTS.md §Roofline):
+
+  all-reduce        : 2x output bytes   (ring = reduce-scatter + all-gather)
+  all-gather        : 1x output bytes   (bytes received per device ~ output)
+  reduce-scatter    : 1x output bytes   (per-device receive volume)
+  all-to-all        : 1x output bytes
+  collective-permute: 1x output bytes
+
+Bytes are PER DEVICE (SPMD: every device executes the same program).
+Collectives inside while/scan bodies are scaled by the loop trip count
+(XLA annotates ``known_trip_count`` on lowered scans), nested loops
+multiply — so a per-layer all-reduce in a 40-layer scan counts 40x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^=]*?\)|\S+?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.-]+)\s+\(.*->")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_BODY_RE = re.compile(r"body=%?([\w.-]+)")
+_TRIP_RE = re.compile(r'known_trip_count=\{"?n"?[:=]"?(\d+)"?\}'
+                      r'|"known_trip_count":\{"n":"(\d+)"\}')
+
+_MULTIPLIER = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def shape_bytes(shape_str: str) -> int:
+    """bytes of 'f32[128,64]' or a tuple '(f32[8], bf16[4,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines.
+
+    Computation headers sit at column 0:
+      %region_0.2 (arg: (s32[], f32[...])) -> (...) {
+      ENTRY %main.42 (...) -> ... {
+    """
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+                continue
+            comps[current].append(line)
+    return comps
+
+
+def _loop_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """computation -> execution multiplier from enclosing loop trip counts."""
+    # find (parent_comp, body_comp, trip) triples
+    edges: List[Tuple[str, str, float]] = []
+    for name, lines in comps.items():
+        for line in lines:
+            if not _WHILE_RE.search(line):
+                continue
+            bm = _BODY_RE.search(line)
+            if not bm:
+                continue
+            tm = _TRIP_RE.search(line)
+            trip = 1.0
+            if tm:
+                trip = float(tm.group(1) or tm.group(2))
+            edges.append((name, bm.group(1), trip))
+    mult: Dict[str, float] = {name: 1.0 for name in comps}
+    # propagate (loops nest at most a few levels; fixed-point iterate)
+    for _ in range(8):
+        changed = False
+        for parent, body, trip in edges:
+            new = mult.get(parent, 1.0) * trip
+            if body in mult and abs(mult[body] - new) > 1e-9:
+                mult[body] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]              # static instruction counts
+    bytes_by_kind: Dict[str, float]     # trip-scaled, multiplier-weighted
+    static_bytes: float                 # unscaled single-execution bytes
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    def as_dict(self):
+        return {
+            "counts": self.counts,
+            "bytes_by_kind": self.bytes_by_kind,
+            "total_bytes": self.total_bytes,
+            "static_bytes": self.static_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    mults = _loop_multipliers(comps)
+    counts: Dict[str, int] = {}
+    by_kind: Dict[str, float] = {}
+    static_total = 0.0
+    for name, lines in comps.items():
+        scale = mults.get(name, 1.0)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m or "-done" in line:
+                continue
+            shape_str, kind = m.group(1), m.group(2)
+            b = shape_bytes(shape_str) * _MULTIPLIER[kind]
+            counts[kind] = counts.get(kind, 0) + 1
+            by_kind[kind] = by_kind.get(kind, 0.0) + b * scale
+            static_total += b
+    return CollectiveStats(counts=counts, bytes_by_kind=by_kind,
+                           static_bytes=static_total)
+
+
+def scan_trip_counts(hlo_text: str) -> List[int]:
+    out = []
+    for m in _TRIP_RE.finditer(hlo_text):
+        out.append(int(m.group(1) or m.group(2)))
+    return out
+
+
+# ----------------------------------------------------- trip-scaled costs ---
+#
+# XLA's HloCostAnalysis visits while bodies exactly ONCE (verified in this
+# container: a 10-step scan reports the same flops as its body), so the
+# roofline needs its own trip-scaled counts from the partitioned HLO.
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*"
+                       r"((?:\([^=]*?\)|\S+?))\s+([\w-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "custom-call", "copy-start", "copy-done",
+    "all-reduce-start", "all-reduce-done", "all-gather-start",
+    "all-gather-done",
+}
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class CostEstimate:
+    flops: float            # trip-scaled per-device dot/conv flops
+    bytes: float            # trip-scaled per-device instruction IO bytes
+
+    def as_dict(self):
+        return {"flops": self.flops, "bytes": self.bytes}
+
+
+def estimate_costs(hlo_text: str) -> CostEstimate:
+    """Trip-scaled per-device flops (dot ops) + IO bytes from HLO text."""
+    comps = _split_computations(hlo_text)
+    mults = _loop_multipliers(comps)
+    # name -> output shape string (instruction names are globally unique)
+    shapes: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+    # computations containing an in-place dynamic-update-slice: fusions
+    # calling them alias their big buffer operand (XLA updates in place),
+    # so actual traffic is the update slice, not the buffer.  (scan carry
+    # stashes and grad-of-scan accumulators are all this pattern)
+    dus_comps = set()
+    for name, lines in comps.items():
+        for line in lines:
+            if "dynamic-update-slice(" in line:
+                dus_comps.add(name)
+                break
+    calls_re = re.compile(r"calls=%?([\w.-]+)")
+    flops = 0.0
+    io_bytes = 0.0
+    for name, lines in comps.items():
+        scale = mults.get(name, 1.0)
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            out_shape, op = m.group(2), m.group(3)
+            # operand list = first paren group AFTER the op name
+            rest = line[m.end():]
+            depth, args = 1, []
+            for ch in rest:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                args.append(ch)
+            arg_str = "".join(args)
+            operands = _OPERAND_RE.findall(arg_str)
+            if op == "dot":
+                out_elems = 1
+                for d in _shape_dims(out_shape):
+                    out_elems *= d
+                k = 1
+                cm = _CONTRACT_RE.search(line)
+                if cm and operands:
+                    lhs_dims = _shape_dims(shapes.get(operands[0], ""))
+                    for ci in (cm.group(1).split(",") if cm.group(1)
+                               else []):
+                        if ci and int(ci) < len(lhs_dims):
+                            k *= lhs_dims[int(ci)]
+                flops += 2.0 * out_elems * k * scale
+            if op in _SKIP_BYTES_OPS:
+                continue
+            out_b = shape_bytes(out_shape)
+            in_place = op == "dynamic-update-slice"
+            if op == "fusion":
+                cm2 = calls_re.search(line)
+                if cm2 and cm2.group(1) in dus_comps:
+                    in_place = True
+            operand_bytes = [shape_bytes(shapes.get(o, ""))
+                             for o in operands]
+            if in_place:
+                # aliased buffer update: traffic = the non-buffer operands
+                # (read, clipped) + an equal-sized write; the aliased
+                # buffer itself is not rewritten.
+                small = [min(ob, out_b) for ob in operand_bytes
+                         if ob < out_b]
+                b = 2.0 * float(sum(small))
+            else:
+                b = float(out_b)
+                for ob in operand_bytes:
+                    if op == "dot":
+                        b += ob        # matmul truly reads both operands
+                    else:
+                        # fusions often slice loop-invariant operands:
+                        # actual reads bounded by the fusion output scale
+                        b += min(ob, out_b)
+            io_bytes += b * scale
+    return CostEstimate(flops=flops, bytes=io_bytes)

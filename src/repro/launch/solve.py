@@ -1,0 +1,84 @@
+"""LP solving driver — the paper's workload as a service.
+
+  PYTHONPATH=src python -m repro.launch.solve --instance gen-ip002 \
+      --backend taox          # crossbar-simulated (device physics + ledger)
+  PYTHONPATH=src python -m repro.launch.solve --instance rand:64x128 \
+      --backend exact         # jitted dense PDHG
+  PYTHONPATH=src python -m repro.launch.solve --instance rand:96x160 \
+      --backend distributed   # shard_map PDHG on all local devices
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..core.pdhg import PDHGOptions, solve_jit
+from ..crossbar import EPIRAM, TAOX_HFOX, solve_crossbar_jit
+from ..lp import (
+    TABLE1_SIZES,
+    pagerank_lp,
+    random_standard_lp,
+    table1_instance,
+)
+
+
+def load_instance(spec: str, seed: int = 0):
+    if spec in TABLE1_SIZES:
+        return table1_instance(spec, seed=seed)
+    if spec.startswith("rand:"):
+        m, n = spec[5:].split("x")
+        return random_standard_lp(int(m), int(n), seed=seed)
+    if spec.startswith("pagerank:"):
+        return pagerank_lp(int(spec.split(":")[1]), seed=seed)
+    raise ValueError(f"unknown instance {spec!r}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--instance", default="gen-ip002")
+    ap.add_argument("--backend", default="exact",
+                    choices=["exact", "epiram", "taox", "distributed"])
+    ap.add_argument("--tol", type=float, default=1e-6)
+    ap.add_argument("--max-iters", type=int, default=40000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    jax.config.update("jax_enable_x64", True)
+    lp = load_instance(args.instance, seed=args.seed)
+    opts = PDHGOptions(max_iters=args.max_iters, tol=args.tol,
+                       check_every=100)
+    if args.backend == "exact":
+        res = solve_jit(lp, opts)
+        led = None
+    elif args.backend in ("epiram", "taox"):
+        dev = EPIRAM if args.backend == "epiram" else TAOX_HFOX
+        rep = solve_crossbar_jit(lp, opts, device=dev)
+        res, led = rep.result, rep.ledger
+    else:
+        from ..distributed.pdhg_dist import solve_dist
+        n_dev = len(jax.devices())
+        rows = max(1, n_dev // 2)
+        cols = max(1, n_dev // rows)
+        mesh = jax.make_mesh(
+            (rows, cols), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        res = solve_dist(lp, mesh, opts)
+        led = None
+
+    print(f"instance={lp.name} shape={lp.K.shape} backend={args.backend}")
+    print(f"status={res.status} iters={res.iterations} "
+          f"sigma_max={res.sigma_max:.6f}")
+    print(f"objective={res.obj:.6f}"
+          + (f" (known optimum {lp.obj_opt:.6f}, "
+             f"rel err {abs(res.obj-lp.obj_opt)/max(abs(lp.obj_opt),1e-12):.2e})"
+             if lp.obj_opt is not None else ""))
+    if led is not None:
+        print(f"energy: write={led.write_energy_j:.4f}J "
+              f"read={led.read_energy_j:.4f}J | latency: "
+              f"write={led.write_latency_s:.4f}s read={led.read_latency_s:.4f}s")
+    return res
+
+
+if __name__ == "__main__":
+    main()

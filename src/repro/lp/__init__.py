@@ -1,0 +1,34 @@
+"""LP problem substrate: containers, generators, ground-truth simplex."""
+from .problem import INF, LPProblem, StandardLP, split_standard_solution
+from .generators import (
+    TABLE1_SIZES,
+    assignment_lp,
+    crossbar_sized_lp,
+    infeasible_lp,
+    netlib_like,
+    pagerank_lp,
+    random_inequality_lp,
+    random_inequality_lp_known,
+    random_standard_lp,
+    table1_instance,
+)
+from . import mps, simplex
+
+__all__ = [
+    "INF",
+    "LPProblem",
+    "StandardLP",
+    "split_standard_solution",
+    "TABLE1_SIZES",
+    "assignment_lp",
+    "crossbar_sized_lp",
+    "infeasible_lp",
+    "netlib_like",
+    "pagerank_lp",
+    "random_inequality_lp",
+    "random_inequality_lp_known",
+    "random_standard_lp",
+    "table1_instance",
+    "simplex",
+    "mps",
+]

@@ -1,0 +1,136 @@
+"""LP problem containers and canonicalization.
+
+The paper (Section 2.1) works with the general form
+
+    min c^T x   s.t.  G x >= h,   A x = b,   l <= x_i <= u
+
+and, "upon suitable projection", with the standard form
+
+    min c^T x   s.t.  K x = b,    lb <= x <= ub        (eq. 3 + Alg. 4)
+
+``LPProblem`` holds the general form; ``StandardLP`` the canonical form the
+in-memory solver consumes.  Conversion introduces one slack variable per
+inequality row (``G x - s = h``, ``s >= 0``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+INF = np.inf
+
+
+@dataclasses.dataclass
+class StandardLP:
+    """min c@x  s.t.  K@x = b,  lb <= x <= ub   (host-side, float64)."""
+
+    c: np.ndarray            # (n,)
+    K: np.ndarray            # (m, n) dense
+    b: np.ndarray            # (m,)
+    lb: np.ndarray           # (n,)  may be -inf
+    ub: np.ndarray           # (n,)  may be +inf
+    # Optional metadata
+    name: str = "lp"
+    x_opt: Optional[np.ndarray] = None   # known optimal solution, if any
+    obj_opt: Optional[float] = None      # known optimal objective, if any
+
+    def __post_init__(self):
+        self.c = np.asarray(self.c, dtype=np.float64).reshape(-1)
+        self.K = np.asarray(self.K, dtype=np.float64)
+        self.b = np.asarray(self.b, dtype=np.float64).reshape(-1)
+        m, n = self.K.shape
+        if self.lb is None:
+            self.lb = np.zeros(n)
+        if self.ub is None:
+            self.ub = np.full(n, INF)
+        self.lb = np.broadcast_to(np.asarray(self.lb, np.float64), (n,)).copy()
+        self.ub = np.broadcast_to(np.asarray(self.ub, np.float64), (n,)).copy()
+        assert self.c.shape == (n,), (self.c.shape, n)
+        assert self.b.shape == (m,), (self.b.shape, m)
+
+    @property
+    def shape(self):
+        return self.K.shape
+
+    def objective(self, x: np.ndarray) -> float:
+        return float(self.c @ x)
+
+    def feasibility_error(self, x: np.ndarray) -> float:
+        """Scaled primal feasibility error (matches paper's r_pri)."""
+        r = np.linalg.norm(self.K @ x - self.b) / (1.0 + np.linalg.norm(self.b))
+        box = np.linalg.norm(np.maximum(self.lb - x, 0.0)) + np.linalg.norm(
+            np.maximum(x - self.ub, 0.0)
+        )
+        return float(r + box)
+
+
+@dataclasses.dataclass
+class LPProblem:
+    """General form (paper eq. 1):  min c@x, Gx>=h, Ax=b, l<=x<=u."""
+
+    c: np.ndarray
+    G: Optional[np.ndarray] = None   # (m1, n)
+    h: Optional[np.ndarray] = None   # (m1,)
+    A: Optional[np.ndarray] = None   # (m2, n)
+    b: Optional[np.ndarray] = None   # (m2,)
+    lb: Optional[np.ndarray] = None
+    ub: Optional[np.ndarray] = None
+    name: str = "lp"
+
+    def __post_init__(self):
+        self.c = np.asarray(self.c, np.float64).reshape(-1)
+        n = self.c.shape[0]
+        if self.G is None:
+            self.G = np.zeros((0, n))
+            self.h = np.zeros((0,))
+        if self.A is None:
+            self.A = np.zeros((0, n))
+            self.b = np.zeros((0,))
+        self.G = np.asarray(self.G, np.float64)
+        self.h = np.asarray(self.h, np.float64).reshape(-1)
+        self.A = np.asarray(self.A, np.float64)
+        self.b = np.asarray(self.b, np.float64).reshape(-1)
+        if self.lb is None:
+            self.lb = np.full(n, -INF)
+        if self.ub is None:
+            self.ub = np.full(n, INF)
+        self.lb = np.broadcast_to(np.asarray(self.lb, np.float64), (n,)).copy()
+        self.ub = np.broadcast_to(np.asarray(self.ub, np.float64), (n,)).copy()
+
+    @property
+    def n(self) -> int:
+        return self.c.shape[0]
+
+    @property
+    def m1(self) -> int:
+        return self.G.shape[0]
+
+    @property
+    def m2(self) -> int:
+        return self.A.shape[0]
+
+    def saddle_data(self):
+        """K = [G; A], q = [h; b] for the saddle problem (eq. 2)."""
+        K = np.concatenate([self.G, self.A], axis=0)
+        q = np.concatenate([self.h, self.b], axis=0)
+        return K, q, self.m1, self.m2
+
+    def to_standard(self) -> StandardLP:
+        """Equality-only canonical form: add slacks s>=0 for Gx - s = h."""
+        n, m1, m2 = self.n, self.m1, self.m2
+        K = np.zeros((m1 + m2, n + m1))
+        K[:m1, :n] = self.G
+        K[:m1, n:] = -np.eye(m1)
+        K[m1:, :n] = self.A
+        b = np.concatenate([self.h, self.b])
+        c = np.concatenate([self.c, np.zeros(m1)])
+        lb = np.concatenate([self.lb, np.zeros(m1)])
+        ub = np.concatenate([self.ub, np.full(m1, INF)])
+        return StandardLP(c=c, K=K, b=b, lb=lb, ub=ub, name=self.name)
+
+
+def split_standard_solution(lp: LPProblem, x_std: np.ndarray) -> np.ndarray:
+    """Drop slack coordinates of a standard-form solution."""
+    return np.asarray(x_std)[: lp.n]

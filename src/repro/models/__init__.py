@@ -1,0 +1,17 @@
+"""Model substrate: unified decoder LM for all assigned architectures."""
+from .config import ModelConfig
+from . import layers, lm, mla, moe, rwkv6, ssm
+from .lm import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_shapes,
+    partition_specs,
+)
+
+__all__ = [
+    "ModelConfig", "layers", "lm", "mla", "moe", "rwkv6", "ssm",
+    "decode_step", "forward", "init_cache", "init_params", "param_shapes",
+    "partition_specs",
+]

@@ -1,0 +1,83 @@
+"""Top-k routed mixture-of-experts (OLMoE 64e/top-8, Grok-1 8e/top-2).
+
+Default path is the grouped one-hot dispatch (Shazeer-style, two einsums)
+with a small group size so the dispatch tensor stays ~tens of MB/device
+under SPMD — robust to the XLA partitioner for the dry-run.  Capacity is
+``ceil(group_tokens * top_k / E * capacity_factor)``; overflowing tokens
+are dropped (standard) and their residual stream passes through.
+
+The scatter-based dropless path (sort by expert, dense per-expert matmul)
+is the hillclimb alternative (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn
+
+GROUP = 512   # tokens per routing group
+
+
+def moe_params_shape(cfg):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": (d, E),
+        "w1": (E, d, ff),
+        "w3": (E, d, ff),
+        "w2": (E, ff, d),
+    }
+
+
+def _capacity(tokens_per_group: int, top_k: int, n_experts: int,
+              factor: float) -> int:
+    c = math.ceil(tokens_per_group * top_k / n_experts * factor)
+    return max(4, int(c))
+
+
+def moe_block(p, x, cfg):
+    """x (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = max(1, T // GROUP)
+    tg = T // g
+    xt = x.reshape(g, tg, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)        # (g, tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                  # (g, tg, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(tg, k, E, cfg.capacity_factor)
+    # expert one-hot per choice: (g, tg, k, E)
+    oh = jax.nn.one_hot(top_i, E, dtype=jnp.float32)
+    # position of each (token, choice) within its expert queue
+    pos = jnp.cumsum(oh.reshape(g, tg * k, E), axis=1).reshape(
+        g, tg, k, E) * oh - 1.0
+    keep = (pos < C) & (oh > 0)
+    pos = jnp.where(keep, pos, 0.0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+    # dispatch (g, tg, E, C) / combine with routing probs folded in
+    dispatch = jnp.einsum("gske,gskec->gsec", oh * keep, pos_oh)
+    combine = jnp.einsum("gske,gskec,gsk->gsec", oh * keep, pos_oh, top_p)
+
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xt)
+    h = act_fn(jnp.einsum("egcd,edf->egcf", xin, p["w1"]), cfg.act)
+    h = h * jnp.einsum("egcd,edf->egcf", xin, p["w3"])
+    out_e = jnp.einsum("egcf,efd->egcd", h, p["w2"])
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), out_e)
+    return out.reshape(B, S, d)
+
+
+def moe_aux_loss(p, x, cfg):
+    """Load-balancing auxiliary loss (Switch-style): E * sum(f_e * p_e)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = (x.reshape(-1, d) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_i = jax.lax.top_k(probs, k)[1]
+    frac = jnp.mean(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac * imp)

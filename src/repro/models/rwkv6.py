@@ -1,0 +1,98 @@
+"""RWKV-6 "Finch" token mixer (arXiv:2404.05892) — attention-free.
+
+Structure (per layer, per head of size dh):
+  token shift   x_i = lerp(x_t, x_{t-1}, mu_i)   for i in {r,k,v,g,w}
+  projections   r, k, v (d -> di), gate g = silu(.), decay LoRA for w
+  data-dependent decay   w_t = exp(-exp(wb + tanh(x_w A) B))  in (0,1)
+  WKV recurrence (state S per head, (dh, dh)):
+      y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+  head-wise group norm, gate, output projection.
+
+O(1) state per token => rwkv6 runs the long_500k decode cell natively.
+Baseline lowers the recurrence as lax.scan; the chunked formulation is a
+hillclimb option.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+LORA_R = 32
+
+
+def rwkv6_params_shape(cfg):
+    d = cfg.d_model
+    nh, dh = cfg.ssm_heads, cfg.d_head
+    di = nh * dh
+    return {
+        "mu": (5, d),                # token-shift lerps for r,k,v,g,w
+        "w_r": (d, di),
+        "w_k": (d, di),
+        "w_v": (d, di),
+        "w_g": (d, di),
+        "w_decay_base": (di,),
+        "w_decay_A": (d, LORA_R),
+        "w_decay_B": (LORA_R, di),
+        "u_bonus": (di,),
+        "ln_x": (di,),
+        "w_o": (di, d),
+    }
+
+
+def _shift(x, prev):
+    """x (B,S,d) -> x_{t-1} with ``prev`` (B,1,d) as the t=0 context."""
+    return jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def rwkv6_mix(p, x, cfg, state=None, x_tail=None):
+    """x (B,S,d) -> (y, (state (B,nh,dh,dh), x_tail (B,1,d)))."""
+    B, S, d = x.shape
+    nh, dh = cfg.ssm_heads, cfg.d_head
+    di = nh * dh
+    prev = x_tail if x_tail is not None else jnp.zeros((B, 1, d), x.dtype)
+    xp = _shift(x, prev)
+    xr = _mix(x, xp, p["mu"][0])
+    xk = _mix(x, xp, p["mu"][1])
+    xv = _mix(x, xp, p["mu"][2])
+    xg = _mix(x, xp, p["mu"][3])
+    xw = _mix(x, xp, p["mu"][4])
+    r = (xr @ p["w_r"]).reshape(B, S, nh, dh)
+    k = (xk @ p["w_k"]).reshape(B, S, nh, dh)
+    v = (xv @ p["w_v"]).reshape(B, S, nh, dh)
+    g = jax.nn.silu(xg @ p["w_g"])
+    # data-dependent decay, clamped for numerical safety
+    dec = p["w_decay_base"] + jnp.tanh(xw @ p["w_decay_A"]) @ p["w_decay_B"]
+    w = jnp.exp(-jnp.exp(jnp.clip(dec.astype(jnp.float32), -8.0, 2.0)))
+    w = w.reshape(B, S, nh, dh)
+    u = p["u_bonus"].reshape(nh, dh)
+    if state is None:
+        state = jnp.zeros((B, nh, dh, dh), jnp.float32)
+
+    def step(S_prev, inp):
+        r_t, k_t, v_t, w_t = [a.astype(jnp.float32) for a in inp]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,nh,dh,dh)
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         S_prev + u[..., :, None] * kv)
+        S_new = w_t[..., :, None] * S_prev + kv
+        return S_new, y_t
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"]) * g
+    out = y @ p["w_o"]
+    return out, (state, x[:, -1:, :])
+
+
+def rwkv6_decode(p, x, cfg, cache):
+    """Single-token step; cache = {"state", "x_tail"} — O(1) memory."""
+    out, (state, tail) = rwkv6_mix(
+        p, x, cfg, state=cache["state"], x_tail=cache["x_tail"])
+    return out, {"state": state, "x_tail": tail}

@@ -1,0 +1,206 @@
+"""Selective SSM (Mamba-style) head + Hymba parallel attn/SSM block.
+
+Hymba (arXiv:2411.13676) fuses attention heads and mamba heads *in
+parallel within the same layer*: both see the same normed input, their
+outputs are normalized and mean-combined.  Attention uses a sliding
+window, and the SSM branch carries unbounded context — the combination is
+sub-quadratic, which is why hymba runs the long_500k cell.
+
+The SSM here is a grouped selective scan (per-head state (N, dh)):
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * (B_t ⊗ x_t)
+    y_t = C_t · S_t + D_h * x_t
+with dt, B, C data-dependent (input projections) — the mamba2 recipe minus
+the depthwise conv fine print (a k=4 depthwise conv is included).
+Baseline lowers as lax.scan over time; the chunked/associative variant is
+a hillclimb option.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import gqa_attention, gqa_decode, gqa_params_shape, rms_norm
+
+CONV_K = 4
+
+
+def ssm_params_shape(cfg):
+    d = cfg.d_model
+    nh, dh, N = cfg.ssm_heads, cfg.d_head, cfg.ssm_state
+    di = nh * dh
+    return {
+        "w_in": (d, 2 * di),          # x branch + gate z
+        "conv": (CONV_K, di),         # depthwise conv
+        "w_dt": (di, nh),
+        "dt_bias": (nh,),
+        "w_B": (d, nh * N),
+        "w_C": (d, nh * N),
+        "A_log": (nh,),
+        "D": (nh,),
+        "w_out": (di, d),
+    }
+
+
+def _depthwise_conv(x, w):
+    """causal depthwise conv: x (B, S, di), w (K, di)."""
+    B, S, di = x.shape
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):      # K is tiny and static: unrolled taps
+        out = out + xp[:, i : i + S, :] * w[i]
+    return out
+
+
+def ssm_scan(p, x, cfg, state=None, conv_tail=None):
+    """x (B, S, d) -> (y (B, S, d), (state, conv_tail)).
+
+    state (B, nh, N, dh); conv_tail (B, CONV_K-1, di) carries the causal
+    conv context across decode steps.
+    """
+    B, S, d = x.shape
+    nh, dh, N = cfg.ssm_heads, cfg.d_head, cfg.ssm_state
+    di = nh * dh
+    xz = x @ p["w_in"]
+    xb, z = xz[..., :di], xz[..., di:]
+    if conv_tail is not None:
+        xb_ext = jnp.concatenate([conv_tail, xb], axis=1)
+        conv_out = _depthwise_conv(xb_ext, p["conv"])[:, -(S):, :]
+        new_tail = xb_ext[:, -(CONV_K - 1):, :]
+    else:
+        conv_out = _depthwise_conv(xb, p["conv"])
+        new_tail = xb[:, -(CONV_K - 1):, :]
+    u = jax.nn.silu(conv_out)                                  # (B,S,di)
+    dt = jax.nn.softplus(u @ p["w_dt"] + p["dt_bias"])         # (B,S,nh)
+    Bmat = (x @ p["w_B"]).reshape(B, S, nh, N)
+    Cmat = (x @ p["w_C"]).reshape(B, S, nh, N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (nh,)
+    uh = u.reshape(B, S, nh, dh)
+    if state is None:
+        state = jnp.zeros((B, nh, N, dh), jnp.float32)
+
+    def step(S_prev, inp):
+        u_t, dt_t, B_t, C_t = inp
+        decay = jnp.exp(dt_t.astype(jnp.float32) * A)[..., None, None]
+        drive = (dt_t[..., None, None] * B_t[..., :, None]
+                 * u_t[..., None, :]).astype(jnp.float32)
+        S_new = decay * S_prev + drive
+        y_t = jnp.einsum("bhn,bhnd->bhd", C_t.astype(jnp.float32), S_new)
+        return S_new, y_t
+
+    xs = (jnp.moveaxis(uh, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                 # (B,S,nh,dh)
+    y = y + uh * p["D"][:, None]
+    y = (y.reshape(B, S, di) * jax.nn.silu(z))
+    return y @ p["w_out"], (state, new_tail)
+
+
+def ssm_scan_chunked(p, x, cfg, state=None, conv_tail=None):
+    """Chunk-parallel selective scan (mamba2-style) — hillclimb 3.
+
+    Identical math to ``ssm_scan`` (per-head scalar decay A_h), processed
+    ``cfg.ssm_chunk`` timesteps at once:
+
+        cum_t  = sum_{s<=t} dt_s * A_h                (log-decay cumsum)
+        y_t    = e^{cum_t} (C_t . S_0)
+                 + sum_{s<=t} e^{cum_t - cum_s} dt_s (C_t . B_s) u_s
+        S_next = e^{cum_L} S_0 + sum_s e^{cum_L - cum_s} dt_s B_s (x) u_s
+
+    The per-step (B,nh,N,dh) state read/write of the sequential scan
+    becomes one (L,L) masked matmul per chunk per head — MXU food.  All
+    exponents are <= 0 for s <= t, so no overflow.
+    """
+    B, S, d = x.shape
+    L = max(1, min(cfg.ssm_chunk, S))
+    if S % L != 0:
+        return ssm_scan(p, x, cfg, state=state, conv_tail=conv_tail)
+    nh, dh, N = cfg.ssm_heads, cfg.d_head, cfg.ssm_state
+    di = nh * dh
+    xz = x @ p["w_in"]
+    xb, z = xz[..., :di], xz[..., di:]
+    if conv_tail is not None:
+        xb_ext = jnp.concatenate([conv_tail, xb], axis=1)
+        conv_out = _depthwise_conv(xb_ext, p["conv"])[:, -(S):, :]
+        new_tail = xb_ext[:, -(CONV_K - 1):, :]
+    else:
+        conv_out = _depthwise_conv(xb, p["conv"])
+        new_tail = xb[:, -(CONV_K - 1):, :]
+    u = jax.nn.silu(conv_out)
+    dt = jax.nn.softplus(u @ p["w_dt"] + p["dt_bias"]).astype(jnp.float32)
+    Bm = (x @ p["w_B"]).reshape(B, S, nh, N).astype(jnp.float32)
+    Cm = (x @ p["w_C"]).reshape(B, S, nh, N).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    uh = u.reshape(B, S, nh, dh).astype(jnp.float32)
+    nc = S // L
+    # chunked views: (B, nc, L, ...)
+    dtc = dt.reshape(B, nc, L, nh)
+    Bc = Bm.reshape(B, nc, L, nh, N)
+    Cc = Cm.reshape(B, nc, L, nh, N)
+    uc = uh.reshape(B, nc, L, nh, dh)
+    if state is None:
+        state = jnp.zeros((B, nh, N, dh), jnp.float32)
+    mask = jnp.tril(jnp.ones((L, L), jnp.float32))
+
+    def chunk_step(S0, inp):
+        dt_k, B_k, C_k, u_k = inp              # (B,L,nh[,N|dh])
+        log_a = dt_k * A                        # (B,L,nh), <= 0
+        cum = jnp.cumsum(log_a, axis=1)         # (B,L,nh)
+        decay0 = jnp.exp(cum)                   # e^{cum_t}
+        # inter-chunk: y_t^0 = e^{cum_t} C_t . S_0
+        y0 = jnp.einsum("blhn,bhnd->blhd", C_k, S0) * decay0[..., None]
+        # intra-chunk quadratic form
+        G = jnp.einsum("blhn,bshn->bhls", C_k, B_k)          # (B,nh,L,L)
+        ratio = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,l,s,h)
+        ratio = jnp.moveaxis(ratio, 3, 1)                    # (B,nh,l,s)
+        W = G * ratio * jnp.moveaxis(dt_k, 2, 1)[:, :, None, :]
+        W = W * mask[None, None]
+        y1 = jnp.einsum("bhls,bshd->blhd", W, u_k)
+        # state propagation to chunk end
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)            # (B,L,nh)
+        drive = jnp.einsum(
+            "blh,blhn,blhd->bhnd", dt_k * decay_end, B_k, u_k)
+        S_new = S0 * jnp.exp(cum[:, -1, :])[..., None, None] + drive
+        return S_new, y0 + y1
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (dtc, Bc, Cc, uc))
+    state, ys = jax.lax.scan(chunk_step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, dh)
+    y = y + uh * p["D"][:, None]
+    y = (y.astype(x.dtype).reshape(B, S, di) * jax.nn.silu(z))
+    return y @ p["w_out"], (state, new_tail)
+
+
+def ssm_apply(p, x, cfg, state=None, conv_tail=None):
+    """Dispatch: chunked when configured and applicable, else sequential."""
+    if cfg.ssm_chunk and x.shape[1] > 1:
+        return ssm_scan_chunked(p, x, cfg, state=state, conv_tail=conv_tail)
+    return ssm_scan(p, x, cfg, state=state, conv_tail=conv_tail)
+
+
+# ------------------------------------------------------------- hymba ---
+
+def hybrid_params_shape(cfg):
+    shapes = {"attn": gqa_params_shape(cfg), "ssm": ssm_params_shape(cfg)}
+    shapes["attn_scale"] = (cfg.d_model,)
+    shapes["ssm_scale"] = (cfg.d_model,)
+    return shapes
+
+
+def hybrid_block(p, x, cfg, positions=None):
+    attn_out, _kv = gqa_attention(p["attn"], x, cfg, positions)
+    ssm_out, _st = ssm_apply(p["ssm"], x, cfg)
+    out = 0.5 * (rms_norm(attn_out, p["attn_scale"])
+                 + rms_norm(ssm_out, p["ssm_scale"]))
+    return out, None
+
+
+def hybrid_decode(p, x, cfg, cache):
+    """cache = {"attn": rolling-window KV, "state", "conv_tail"}."""
+    attn_out, attn_cache = gqa_decode(p["attn"], x, cfg, cache["attn"])
+    ssm_out, (state, tail) = ssm_scan(
+        p["ssm"], x, cfg, state=cache["state"], conv_tail=cache["conv_tail"])
+    out = 0.5 * (rms_norm(attn_out, p["attn_scale"])
+                 + rms_norm(ssm_out, p["ssm_scale"]))
+    return out, {"attn": attn_cache, "state": state, "conv_tail": tail}

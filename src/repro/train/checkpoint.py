@@ -1,0 +1,63 @@
+"""Sharding-aware training checkpoints (thin wrapper over distributed.fault).
+
+Pytrees are flattened to path-keyed arrays; restore re-places leaves onto
+the current mesh with the model's partition specs — so a checkpoint
+written on 512 chips restores onto 256 (elastic downscale) or onto the
+CPU host (debugging) unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..distributed import fault
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root
+
+
+def save_train_state(path: str, step: int, params, opt_state,
+                     meta: Optional[dict] = None) -> str:
+    arrays = {}
+    arrays.update({f"params/{k}": v for k, v in _flatten(params).items()})
+    arrays.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    return fault.save_checkpoint(path, step, arrays, meta)
+
+
+def load_train_state(path: str):
+    ck = fault.load_checkpoint(path)
+    params = _unflatten({k[len("params/"):]: v for k, v in ck.arrays.items()
+                         if k.startswith("params/")})
+    opt_state = _unflatten({k[len("opt/"):]: v for k, v in ck.arrays.items()
+                            if k.startswith("opt/")})
+    return ck.step, params, opt_state, ck.meta
+
+
+def place(tree, mesh, specs_tree):
+    """device_put a host pytree with a parallel PartitionSpec pytree."""
+    from jax.sharding import NamedSharding
+
+    def go(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(go, tree, specs_tree)

@@ -1,0 +1,126 @@
+"""Optimizers built in-repo (no optax in the container).
+
+AdamW keeps f32 moments regardless of param dtype (mixed-precision
+convention); Adafactor-mini keeps factored second moments only (the
+low-memory option for the 314B-class configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params
+                 ) -> Tuple[Any, Any]:
+    step = opt_state["step"] + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32) * clip
+        m_n = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_n = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        t = step.astype(jnp.float32)
+        m_hat = m_n / (1 - cfg.b1 ** t)
+        v_hat = v_n / (1 - cfg.b2 ** t)
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return p_n, m_n, v_n
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ----------------------------------------------------- Adafactor-mini ---
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    grad_clip: float = 1.0
+
+
+def adafactor_init(params):
+    def fac(p):
+        if p.ndim >= 2:
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(fac, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: AdafactorConfig, grads, opt_state, params):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-cfg.decay)
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, f, p):
+        g32 = g.astype(jnp.float32) * clip
+        if p.ndim >= 2:
+            row = beta * f["row"] + (1 - beta) * jnp.mean(
+                g32 * g32, axis=-1)
+            col = beta * f["col"] + (1 - beta) * jnp.mean(
+                g32 * g32, axis=-2)
+            rf = row / jnp.maximum(
+                jnp.mean(row, axis=-1, keepdims=True), cfg.eps)
+            vhat = rf[..., None] * col[..., None, :]
+            new_f = {"row": row, "col": col}
+        else:
+            vhat = beta * f["v"] + (1 - beta) * g32 * g32
+            new_f = {"v": vhat}
+        delta = g32 / jnp.sqrt(jnp.maximum(vhat, cfg.eps))
+        p_n = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return p_n, new_f
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    is_f = lambda x: isinstance(x, dict) and ("row" in x or "v" in x)  # noqa: E731
+    flat_f = jax.tree.leaves(opt_state["f"], is_leaf=is_f)
+    out = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_f = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_p, {"f": new_f, "step": step}

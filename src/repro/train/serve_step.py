@@ -1,0 +1,60 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``serve_step`` is what decode_* / long_* dry-run cells lower: one new
+token against a KV cache of the cell's seq_len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm as lm_mod
+from ..models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, last_only: bool = True):
+    """Prefill: run the backbone over the prompt, emit last-token logits.
+
+    ``last_only=True`` (default after hillclimb 2) projects ONLY the final
+    hidden state through the vocab head; ``False`` reproduces the naive
+    baseline that materializes (B, S, V) logits first.
+    """
+    def prefill(params, batch):
+        logits = lm_mod.forward(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeddings=batch.get("embeddings"),
+            remat=False,
+            last_only=last_only,
+        )
+        return logits[:, -1, :]
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache):
+        logits, new_cache = lm_mod.decode_step(params, cfg, tokens, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, max_new: int,
+                    max_len: int):
+    """Host loop generation (examples/tests; small configs)."""
+    B, S = prompt.shape
+    cache = lm_mod.init_cache(cfg, B, max_len)
+    serve = jax.jit(make_serve_step(cfg))
+    # prefill token-by-token through the decode path (simple + exact)
+    tok = prompt[:, :1]
+    for i in range(S - 1):
+        _, _, cache = serve(params, prompt[:, i : i + 1], cache)
+    out = [prompt]
+    tok = prompt[:, -1:]
+    for _ in range(max_new):
+        nxt, _, cache = serve(params, tok, cache)
+        tok = nxt[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,115 @@
+"""Training step: loss, grad, microbatching, optional int8 grad compression.
+
+``make_train_step(cfg)`` builds the jittable  (params, opt_state, batch)
+-> (params, opt_state, metrics)  function the launcher lowers for the
+dry-run.  Batch = {"tokens" | "embeddings", "labels"}; loss is next-token
+cross-entropy with label shift handled by the data pipeline (labels are
+pre-shifted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm as lm_mod
+from ..models.config import ModelConfig
+from . import optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    microbatch: int = 0               # 0 = no gradient accumulation
+    remat: bool = True
+    remat_policy: Optional[str] = None
+    moe_aux_weight: float = 0.01
+    z_loss: float = 1e-4
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Mean next-token xent; logits (B,S,V) f32-accumulated; z-loss reg."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss > 0.0:
+        loss = loss + z_loss * jnp.mean(lse * lse)
+    return loss
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        logits = lm_mod.forward(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeddings=batch.get("embeddings"),
+            remat=tcfg.remat, remat_policy=tcfg.remat_policy,
+        )
+        loss = cross_entropy(logits, batch["labels"], tcfg.z_loss)
+        return loss, {"loss": loss}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    loss_fn = make_loss_fn(cfg, tcfg)
+    if tcfg.optimizer == "adamw":
+        ocfg = opt_mod.AdamWConfig(lr=tcfg.lr, weight_decay=tcfg.weight_decay)
+        opt_update = functools.partial(opt_mod.adamw_update, ocfg)
+    else:
+        ocfg = opt_mod.AdafactorConfig(lr=tcfg.lr)
+        opt_update = functools.partial(opt_mod.adafactor_update, ocfg)
+
+    def grads_of(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            # gradient accumulation over leading-dim splits of the batch
+            nm = tcfg.microbatch
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(nm, b // nm, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (g, loss_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), micro)
+            g = jax.tree.map(lambda x: x / nm, g)
+            return loss_sum / nm, g
+        (loss, _aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, g
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def init_opt_state(cfg_or_params, tcfg: TrainConfig = TrainConfig()):
+    params = cfg_or_params
+    if tcfg.optimizer == "adamw":
+        return opt_mod.adamw_init(params)
+    return opt_mod.adafactor_init(params)
+
+
+def opt_state_shapes(params_shapes, tcfg: TrainConfig = TrainConfig()):
+    """ShapeDtypeStruct pytree of the optimizer state (dry-run input)."""
+    init = (opt_mod.adamw_init if tcfg.optimizer == "adamw"
+            else opt_mod.adafactor_init)
+    return jax.eval_shape(init, params_shapes)

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: never set xla_force_host_platform_device_count
+here — smoke tests and benches must see the real single device; only the
+dry-run subprocess uses 512 fake devices."""
+import jax
+import pytest
+
+
+@pytest.fixture
+def x64():
+    """Enable f64 for precision-sensitive LP assertions, then restore."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+@pytest.fixture
+def rng():
+    import numpy as np
+
+    return np.random.default_rng(0)

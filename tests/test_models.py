@@ -1,0 +1,207 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_shapes,
+    partition_specs,
+)
+from repro.train import (
+    DataConfig,
+    TrainConfig,
+    init_opt_state,
+    make_train_step,
+    synth_batch,
+)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_forward_and_train_step(arch):
+    """One forward + one train step on the reduced config; shapes + no NaN."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    dcfg = DataConfig(vocab=cfg.vocab, batch=B, seq_len=S,
+                      embeddings_dim=cfg.d_model
+                      if cfg.frontend in ("vision", "audio") else 0)
+    batch = {k: jnp.asarray(v) for k, v in synth_batch(dcfg, 0).items()}
+    logits = forward(params, cfg, tokens=batch.get("tokens"),
+                     embeddings=batch.get("embeddings"))
+    from repro.models.lm import padded_vocab
+    assert logits.shape == (B, S, padded_vocab(cfg))
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+    step = jax.jit(make_train_step(cfg, TrainConfig(remat=True)))
+    opt = init_opt_state(params)
+    p2, o2, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), params, p2))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    B = 2
+    cache = init_cache(cfg, B, max_len=16)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = decode_step(params, cfg, tok, cache)
+    from repro.models.lm import padded_vocab
+    assert logits.shape == (B, padded_vocab(cfg))
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "minicpm3-4b",
+                                  "rwkv6-1.6b", "hymba-1.5b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full-sequence forward logits."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    full = np.asarray(forward(params, cfg, tokens=toks), np.float32)
+    cache = init_cache(cfg, B, max_len=S)
+    outs = []
+    for t in range(S):
+        logits, cache = decode_step(params, cfg, toks[:, t:t + 1], cache)
+        outs.append(np.asarray(logits, np.float32))
+    dec = np.stack(outs, axis=1)
+    scale = np.abs(full).max()
+    np.testing.assert_allclose(dec, full, atol=2e-2 * scale, rtol=0.05)
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment table."""
+    expect = {
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+    }
+    for arch, (L, d, H, Hkv, ff, V) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == H, arch
+        assert cfg.n_kv_heads == Hkv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab == V, arch
+    assert get_config("olmoe-1b-7b").n_experts == 64
+    assert get_config("olmoe-1b-7b").top_k == 8
+    assert get_config("grok-1-314b").n_experts == 8
+    assert get_config("grok-1-314b").top_k == 2
+    assert get_config("hymba-1.5b").ssm_state == 16
+
+
+def test_param_counts_plausible():
+    """Analytic param counts should be near the advertised model sizes."""
+    approx = {
+        "granite-3-8b": (8e9, 0.35),
+        # starcoder2's published MLP is non-gated (2 mats); our unified
+        # block is gated (3 mats) => ~1.1B extra at these dims
+        "starcoder2-3b": (3e9, 0.45),
+        "qwen3-14b": (14e9, 0.35),
+        "minicpm3-4b": (4e9, 0.45),
+        "olmoe-1b-7b": (7e9, 0.35),
+        "grok-1-314b": (314e9, 0.25),
+        "musicgen-large": (2e9*1.7, 0.6),   # 48L/2048d backbone-only
+        "rwkv6-1.6b": (1.6e9, 0.45),
+        "hymba-1.5b": (1.5e9, 0.45),
+        "phi-3-vision-4.2b": (4.2e9, 0.35),
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_partition_specs_cover_all_params():
+    for arch in ("granite-3-8b", "olmoe-1b-7b", "rwkv6-1.6b"):
+        cfg = get_config(arch)
+        shapes = param_shapes(cfg)
+        specs = partition_specs(cfg)
+        flat_s = jax.tree.leaves(shapes)
+        from jax.sharding import PartitionSpec
+        flat_p = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+        assert len(flat_s) == len(flat_p)
+        for sds, spec in zip(flat_s, flat_p):
+            assert len(spec) <= len(sds.shape)
+
+
+def test_chunked_attention_matches_naive():
+    from repro.models.layers import chunked_causal_attention
+
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 2, 64, 4, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    out = chunked_causal_attention(q, k, v, chunk=16)
+    # naive reference
+    scores = jnp.einsum("bshd,bchd->bhsc", q, k) / np.sqrt(D)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    ref = jnp.einsum("bhsc,bchd->bshd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_sliding_window_attention_masks_correctly():
+    from repro.models.layers import chunked_causal_attention
+
+    key = jax.random.PRNGKey(1)
+    B, S, H, D, W = 1, 64, 2, 8, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    out = chunked_causal_attention(q, k, v, chunk=16, window=W)
+    scores = jnp.einsum("bshd,bchd->bhsc", q, k) / np.sqrt(D)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = (qp >= kp) & (qp - kp < W)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    ref = jnp.einsum("bhsc,bchd->bshd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """Opt-in int8 KV cache: decode logits track the fp cache closely."""
+    import dataclasses
+
+    cfg = get_smoke_config("granite-3-8b")
+    cfg8 = dataclasses.replace(cfg, kv_cache_int8=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    c_fp = init_cache(cfg, B, max_len=S)
+    c_q = init_cache(cfg8, B, max_len=S)
+    assert c_q["k"].dtype == jnp.int8
+    for t in range(S):
+        lf, c_fp = decode_step(params, cfg, toks[:, t:t + 1], c_fp)
+        lq, c_q = decode_step(params, cfg8, toks[:, t:t + 1], c_q)
+    lf = np.asarray(lf, np.float32)
+    lq = np.asarray(lq, np.float32)
+    scale = np.abs(lf).max()
+    assert np.abs(lf - lq).max() < 0.05 * scale
+    assert (lf.argmax(-1) == lq.argmax(-1)).all()

@@ -1,0 +1,90 @@
+"""Hillclimb 3 safety net: chunk-parallel selective scan == sequential."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="hybrid", n_layers=1, d_model=64,
+                n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab=97,
+                mixer="hybrid", ssm_state=8, ssm_heads=4, window=16,
+                dtype="float32", attn_chunk=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _params(cfg, key):
+    shapes = ssm_mod.ssm_params_shape(cfg)
+    leaves, treedef = jax.tree.flatten(
+        shapes, is_leaf=lambda s: isinstance(s, tuple))
+    ks = jax.random.split(key, len(leaves))
+    p = jax.tree.unflatten(
+        treedef, [jax.random.normal(k, s) * 0.3 for k, s in zip(ks, leaves)])
+    p["A_log"] = jnp.zeros(cfg.ssm_heads)
+    p["dt_bias"] = jnp.full(cfg.ssm_heads, 0.5)
+    p["D"] = jnp.full(cfg.ssm_heads, 0.5)
+    return p
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_chunked_scan_matches_sequential(chunk):
+    cfg = _cfg()
+    p = _params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64)) * 0.5
+    y_seq, (s_seq, t_seq) = ssm_mod.ssm_scan(p, x, cfg)
+    cfg_c = dataclasses.replace(cfg, ssm_chunk=chunk)
+    y_chk, (s_chk, t_chk) = ssm_mod.ssm_scan_chunked(p, x, cfg_c)
+    scale = float(jnp.abs(y_seq).max())
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq),
+                               atol=5e-5 * scale, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_seq),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_array_equal(np.asarray(t_chk), np.asarray(t_seq))
+
+
+def test_chunked_scan_state_carry():
+    """Splitting a sequence across two chunked calls == one call."""
+    cfg = dataclasses.replace(_cfg(), ssm_chunk=16)
+    p = _params(cfg, jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 64)) * 0.5
+    y_full, _ = ssm_mod.ssm_scan_chunked(p, x, cfg)
+    y1, (s1, t1) = ssm_mod.ssm_scan_chunked(p, x[:, :32], cfg)
+    y2, _ = ssm_mod.ssm_scan_chunked(p, x[:, 32:], cfg, state=s1,
+                                     conv_tail=t1)
+    y_cat = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_chunked_falls_back_on_ragged_length():
+    """Non-divisible S silently uses the sequential (exact) path."""
+    cfg = dataclasses.replace(_cfg(), ssm_chunk=16)
+    p = _params(cfg, jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 50, 64)) * 0.5
+    y_chk, _ = ssm_mod.ssm_scan_chunked(p, x, cfg)
+    y_seq, _ = ssm_mod.ssm_scan(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq),
+                               atol=1e-6)
+
+
+def test_hybrid_block_uses_chunked_when_configured():
+    cfg = dataclasses.replace(_cfg(), ssm_chunk=16)
+    shapes = ssm_mod.hybrid_params_shape(cfg)
+    leaves, treedef = jax.tree.flatten(
+        shapes, is_leaf=lambda s: isinstance(s, tuple))
+    ks = jax.random.split(jax.random.PRNGKey(6), len(leaves))
+    p = jax.tree.unflatten(
+        treedef, [jax.random.normal(k, s) * 0.2 for k, s in zip(ks, leaves)])
+    p["ssm"]["A_log"] = jnp.zeros(cfg.ssm_heads)
+    p["ssm"]["dt_bias"] = jnp.full(cfg.ssm_heads, 0.5)
+    p["ssm"]["D"] = jnp.full(cfg.ssm_heads, 0.5)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 32, 64)) * 0.5
+    out, _ = ssm_mod.hybrid_block(p, x, cfg)
+    assert out.shape == x.shape
+    assert not np.any(np.isnan(np.asarray(out)))

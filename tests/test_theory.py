@@ -1,0 +1,130 @@
+"""Property-based tests for the paper's theoretical results (§4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    NoiseModel,
+    build_sym_block,
+    encode_exact,
+    encode_noisy,
+    lanczos_svd,
+    lemma2_worst_case,
+    safe_coupling,
+    spectral_ratio,
+    theorem2_envelope,
+)
+from repro.lp import random_standard_lp
+
+dims = st.tuples(st.integers(2, 12), st.integers(2, 12))
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=dims, seed=st.integers(0, 10_000))
+def test_proposition1_lambda_max_equals_sigma_max(dims, seed):
+    """Prop. 1: lambda_max(M) == sigma_max(K) for arbitrary K."""
+    m, n = dims
+    rng = np.random.default_rng(seed)
+    K = rng.normal(size=(m, n))
+    M = np.asarray(build_sym_block(K))
+    lam = np.max(np.abs(np.linalg.eigvalsh(M)))
+    sig = np.linalg.svd(K, compute_uv=False)[0]
+    np.testing.assert_allclose(lam, sig, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=dims, seed=st.integers(0, 10_000))
+def test_proposition1_plus_minus_pairs(dims, seed):
+    """Prop. 1 proof detail: eigenvalues of M come in +-sigma_i pairs."""
+    m, n = dims
+    rng = np.random.default_rng(seed)
+    K = rng.normal(size=(m, n))
+    M = np.block([[np.zeros((m, m)), K], [K.T, np.zeros((n, n))]])
+    eigs = np.sort(np.linalg.eigvalsh(M))
+    svs = np.linalg.svd(K, compute_uv=False)
+    for s in svs:
+        assert np.min(np.abs(eigs - s)) < 1e-8 * max(1, s)
+        assert np.min(np.abs(eigs + s)) < 1e-8 * max(1, s)
+
+
+@settings(max_examples=50, deadline=None)
+@given(L=st.floats(0.1, 100.0), delta=st.floats(0.0, 0.5),
+       eta=st.floats(0.1, 0.99), omega=st.floats(0.25, 4.0),
+       err=st.floats(-1.0, 1.0))
+def test_lemma2_safe_coupling(L, delta, eta, omega, err):
+    """Whenever |L^ - L| <= delta*L, the chosen steps keep tau*sigma*L^2<1."""
+    L_hat = L * (1.0 + err * delta)      # any estimate within the band
+    sc = safe_coupling(L_hat, delta_bar=delta, eta=eta, omega=omega)
+    assert sc.satisfied
+    lhs, ok = lemma2_worst_case(L, L_hat, sc.tau, sc.sigma, delta)
+    assert ok, (lhs, sc)
+    assert sc.tau * sc.sigma * L * L < 1.0 + 1e-9
+
+
+def test_theorem1_noisy_lanczos_error_tracks_envelope():
+    """Ritz error under MVM noise stays within C*rho^k + k*eps (Thm. 1)."""
+    rng = np.random.default_rng(0)
+    K = rng.normal(size=(20, 30))
+    sigma_true = np.linalg.svd(K, compute_uv=False)[0]
+    eps = 1e-3
+    noise = NoiseModel("multiplicative", eps)
+    acc = encode_noisy(K, noise.apply)
+    res = lanczos_svd(acc, k_max=30, tol=0.0, noise_keys=True,
+                      key=jax.random.PRNGKey(0))
+    errors = np.abs(res.ritz_history - sigma_true) / sigma_true
+    M = np.asarray(build_sym_block(K))
+    rho, p = spectral_ratio(np.linalg.eigvalsh(M))
+    ks = np.arange(1, len(errors) + 1)
+    # generous constant C; eps_max scaled by sigma (relative noise)
+    envelope = 10.0 * rho ** (ks - 1) + ks * eps * 4.0
+    assert np.all(errors <= envelope), (errors, envelope)
+    # and the estimate is still good enough for step sizing (Lemma 2 band)
+    assert errors[-1] < 0.1
+
+
+def test_theorem1_lanczos_beats_power_iteration_under_noise():
+    """The paper's motivation for Lanczos: faster reliable estimates."""
+    from repro.core import power_iteration
+
+    rng = np.random.default_rng(1)
+    K = rng.normal(size=(24, 36))
+    sigma_true = np.linalg.svd(K, compute_uv=False)[0]
+    acc = encode_exact(K)
+    res = lanczos_svd(acc, k_max=12, tol=0.0)
+    lanczos_err = abs(res.sigma_max - sigma_true) / sigma_true
+    pi_est = float(power_iteration(jnp.asarray(K), iters=12))
+    pi_err = abs(pi_est - sigma_true) / sigma_true
+    assert lanczos_err <= pi_err + 1e-12
+
+
+@pytest.mark.parametrize("sigma_noise", [3e-3])
+def test_theorem2_noise_floor_scales_with_delta(x64, sigma_noise):
+    """Thm. 2: gap(K) = O(1/K) + O(delta/sqrt(K)) — the noisy solve
+    plateaus near its noise floor while the clean solve keeps going."""
+    from repro.core import PDHGOptions, solve_jit
+
+    lp = random_standard_lp(12, 20, seed=3)
+    opts = PDHGOptions(max_iters=8000, tol=1e-10, check_every=100)
+    clean = solve_jit(lp, opts)
+    noisy = solve_jit(lp, opts, sigma_read=sigma_noise)
+    gap_clean = abs(clean.obj - lp.obj_opt) / abs(lp.obj_opt)
+    gap_noisy = abs(noisy.obj - lp.obj_opt) / abs(lp.obj_opt)
+    assert gap_clean < 1e-6
+    # noise floor: worse than clean, but bounded by ~O(delta)
+    assert gap_noisy < 50 * sigma_noise
+    # envelope shape sanity
+    env = theorem2_envelope(np.array([8000.0]), C0=10.0, delta=sigma_noise)
+    assert gap_noisy < 100 * env[0] + 10 * sigma_noise
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), sigma=st.floats(1e-4, 1e-2))
+def test_noise_model_unbiased(seed, sigma):
+    """Assumption 2: E[noise] = 0 (multiplicative model, clipped)."""
+    noise = NoiseModel("multiplicative", sigma)
+    w = jnp.ones(4096)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 64)
+    mean = np.mean([np.mean(np.asarray(noise.apply(k, w))) for k in keys])
+    assert abs(mean - 1.0) < 6 * sigma / np.sqrt(64 * 4096) + 1e-6

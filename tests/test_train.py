@@ -1,0 +1,134 @@
+"""Training substrate: optimizers, microbatching, data, checkpoints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import (
+    AdamWConfig,
+    DataConfig,
+    TrainConfig,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    synth_batch,
+)
+from repro.train.optimizer import AdafactorConfig
+
+
+def _quadratic_losses(update_fn, init_fn, cfg, steps=60):
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(8,)),
+                               jnp.float32)}
+    target = jnp.arange(8.0)
+    opt = init_fn(params)
+    losses = []
+    for _ in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, opt = update_fn(cfg, grads, opt, params)
+        losses.append(float(jnp.sum((params["w"] - target) ** 2)))
+    return losses
+
+
+def test_adamw_decreases_quadratic():
+    losses = _quadratic_losses(adamw_update, adamw_init,
+                               AdamWConfig(lr=0.1, weight_decay=0.0))
+    assert losses[-1] < losses[0] * 0.05
+
+
+def test_adafactor_decreases_quadratic():
+    losses = _quadratic_losses(adafactor_update, adafactor_init,
+                               AdafactorConfig(lr=0.3))
+    assert losses[-1] < losses[0] * 0.2
+
+
+def test_microbatch_equals_full_batch_grads():
+    """Gradient accumulation is exact (same loss/grad as one big batch)."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+
+    cfg = get_smoke_config("granite-3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in synth_batch(
+        DataConfig(cfg.vocab, 4, 16), 0).items()}
+    from repro.train import train_step as ts_mod
+    # compare one optimizer step with and without accumulation
+    step_full = jax.jit(ts_mod.make_train_step(cfg, TrainConfig(lr=1e-2)))
+    step_micro = jax.jit(ts_mod.make_train_step(
+        cfg, TrainConfig(lr=1e-2, microbatch=2)))
+    opt = ts_mod.init_opt_state(params)
+    p1, _, m1 = step_full(params, opt, batch)
+    p2, _, m2 = step_micro(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p2)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_data_pipeline_deterministic_and_restartable():
+    cfg = DataConfig(vocab=101, batch=4, seq_len=16, seed=3)
+    b1 = synth_batch(cfg, 42)
+    b2 = synth_batch(cfg, 42)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = synth_batch(cfg, 43)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are the shifted stream
+    assert b1["tokens"].shape == (4, 16)
+    assert b1["labels"].shape == (4, 16)
+    assert np.all(b1["tokens"] < 101)
+
+
+def test_prefetcher_delivers_in_order():
+    from repro.train import Prefetcher
+
+    cfg = DataConfig(vocab=50, batch=2, seq_len=8, seed=0)
+    pf = Prefetcher(cfg, start_step=5, depth=2)
+    try:
+        got = next(iter(pf))
+        expect = synth_batch(cfg, 5)
+        np.testing.assert_array_equal(got["tokens"], expect["tokens"])
+    finally:
+        pf.close()
+
+
+def test_train_checkpoint_roundtrip(tmp_path):
+    from repro.train import load_train_state, save_train_state
+
+    params = {"layers": {"w": np.ones((2, 3))}, "embed": np.zeros(4)}
+    opt = {"m": {"layers": {"w": np.ones((2, 3)) * 2},
+                 "embed": np.zeros(4)}, "step": np.asarray(9)}
+    path = str(tmp_path / "t.npz")
+    save_train_state(path, 123, params, opt, {"note": "x"})
+    step, p2, o2, meta = load_train_state(path)
+    assert step == 123 and meta["note"] == "x"
+    np.testing.assert_array_equal(p2["layers"]["w"], params["layers"]["w"])
+    np.testing.assert_array_equal(o2["m"]["layers"]["w"],
+                                  opt["m"]["layers"]["w"])
+
+
+def test_end_to_end_training_loss_decreases():
+    """A few hundred steps on a tiny LM: loss must drop markedly."""
+    from repro.launch import train as train_mod
+
+    losses = train_mod.main([
+        "--arch", "starcoder2-3b", "--smoke", "--steps", "60",
+        "--batch", "4", "--seq", "32", "--lr", "1e-2", "--log-every", "30",
+    ])
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_train_resume_from_checkpoint(tmp_path):
+    from repro.launch import train as train_mod
+
+    ckpt = str(tmp_path / "ck")
+    l1 = train_mod.main([
+        "--arch", "rwkv6-1.6b", "--smoke", "--steps", "20", "--batch", "2",
+        "--seq", "16", "--ckpt-dir", ckpt, "--ckpt-every", "10",
+        "--log-every", "10",
+    ])
+    l2 = train_mod.main([
+        "--arch", "rwkv6-1.6b", "--smoke", "--steps", "30", "--batch", "2",
+        "--seq", "16", "--ckpt-dir", ckpt, "--ckpt-every", "10",
+        "--resume", "--log-every", "10",
+    ])
+    assert len(l2) == 10          # resumed at step 20, ran to 30

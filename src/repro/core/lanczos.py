@@ -77,7 +77,11 @@ def lanczos_svd(
         T = _tridiag(alphas, betas[:-1])
         ritz = float(np.max(np.abs(np.linalg.eigvalsh(T))))
         ritz_hist.append(ritz)
-        if beta_next < tol:
+        # breakdown when beta hits the requested tol OR the fp-roundoff
+        # floor of the working dtype (an absolute 1e-10 can never trigger
+        # in f32, where residual norms bottom out around eps * ||M||)
+        eps_floor = 8.0 * float(jnp.finfo(w.dtype).eps) * max(ritz, 1.0)
+        if beta_next < max(tol, eps_floor):
             break
         v_prev = v
         v = w / beta_next

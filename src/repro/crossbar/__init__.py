@@ -4,11 +4,16 @@ from .encode import EncodedMatrix, encode_matrix, write_verify_error
 from .energy import Ledger
 from .array import CrossbarArray, analog_linear, crossbar_accel_factory
 from .gpu import RTX6000, GPUModel
-from .solver import CrossbarSolveReport, solve_crossbar_jit
+from .solver import (
+    CrossbarSolveReport,
+    solve_crossbar_jit,
+    solve_crossbar_stream,
+)
 
 __all__ = [
     "DEVICES", "EPIRAM", "TAOX_HFOX", "DeviceModel",
     "EncodedMatrix", "encode_matrix", "write_verify_error",
     "Ledger", "CrossbarArray", "analog_linear", "crossbar_accel_factory",
     "RTX6000", "GPUModel", "CrossbarSolveReport", "solve_crossbar_jit",
+    "solve_crossbar_stream",
 ]

@@ -17,7 +17,7 @@ core.  This module runs the SAME device physics inside the jitted solver:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,7 @@ from ..core import pdhg as pdhg_mod
 from ..core.pdhg import PDHGOptions, PDHGResult
 from ..core.symblock import build_sym_block
 from ..lp.problem import StandardLP
+from ..runtime.batch import bucket_dims, pad_problem
 from .device import DeviceModel, EPIRAM
 from .encode import encode_matrix
 from .energy import Ledger
@@ -83,3 +84,32 @@ def solve_crossbar_jit(
         result=result, ledger=ledger, device=device,
         lanczos_mvms=lanczos_mvms, pdhg_mvms=pdhg_mvms,
     )
+
+
+def solve_crossbar_stream(
+    lps: Sequence[StandardLP],
+    opts: PDHGOptions = PDHGOptions(),
+    device: DeviceModel = EPIRAM,
+) -> List[CrossbarSolveReport]:
+    """Serve a heterogeneous LP stream on one simulated crossbar tier.
+
+    Each instance is padded up to its power-of-two runtime bucket (see
+    ``runtime.batch``) before encoding, so the jitted solve core is
+    traced once per bucket instead of once per distinct ``(m, n)`` —
+    the crossbar analogue of the batch scheduler's executable reuse.
+    Padded cells still encode (lb=ub=0 pins their variables), so device
+    physics and the energy ledger see the full programmed array.
+    """
+    reports = []
+    for i, lp in enumerate(lps):
+        mb, nb = bucket_dims(*lp.K.shape)
+        padded = pad_problem(lp, mb, nb)
+        rep = solve_crossbar_jit(padded, opts, device=device,
+                                 key=jax.random.PRNGKey(opts.seed + i))
+        m, n = lp.K.shape
+        res = rep.result
+        x = res.x[:n]
+        rep.result = dataclasses.replace(
+            res, x=x, y=res.y[:m], obj=float(lp.c @ x))
+        reports.append(rep)
+    return reports

@@ -6,10 +6,14 @@ device runs the dense jitted PDHG core locally — zero collectives during
 the solve, embarrassingly parallel, linear scaling.  This is the serving
 configuration for LP-as-a-service workloads (the paper's framing of RRAM
 arrays as shared linear-optimization accelerators).
+
+The stacked-batch pipeline itself lives in ``repro.runtime.batch`` (one
+bucket of the shape-bucketing scheduler IS this path); this module keeps
+the explicit same-shape API for callers that already stacked their
+problems.  Heterogeneous streams should use ``runtime.solve_stream``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -18,16 +22,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..core import pdhg as pdhg_mod
 from ..core.pdhg import PDHGOptions
-
-
-def _single_solve(K, b, c, lb, ub, T, Sigma, rho, opts_static):
-    x, y, it, merit = pdhg_mod._solve_jit_core(
-        K, K.T, b, c, lb, ub, T, Sigma, rho, jax.random.PRNGKey(1),
-        opts_static,
-    )
-    return x, y, it, merit
+from ..runtime.batch import make_bucket_pipeline
+from ..runtime.batch import stack_problems  # noqa: F401  (re-export)
 
 
 def solve_batch(
@@ -42,34 +39,9 @@ def solve_batch(
     the product of ``batch_axes`` sizes.  Preconditioning (Ruiz + PC + the
     Lanczos norm) runs vmapped per instance.
     """
-    Ks = jnp.asarray(Ks)
-    B = Ks.shape[0]
-
-    def prep_one(K, b, c, lb, ub):
-        from ..core.lanczos import lanczos_svd_jit
-        from ..core.precondition import apply_ruiz, diagonal_precondition
-        from ..core.symblock import build_sym_block
-        scaled = apply_ruiz(K, b, c, lb, ub, iters=opts.ruiz_iters)
-        T, Sigma = diagonal_precondition(scaled.K)
-        Keff = jnp.sqrt(Sigma)[:, None] * scaled.K * jnp.sqrt(T)[None, :]
-        rho = lanczos_svd_jit(build_sym_block(Keff), k_max=opts.lanczos_iters)
-        return (scaled.K, scaled.b, scaled.c, scaled.lb, scaled.ub, T,
-                Sigma, rho, scaled.D1, scaled.D2)
-
-    opts_static = (opts.max_iters, opts.tol, opts.eta, opts.omega,
-                   opts.gamma, opts.check_every,
-                   opts.restart_beta if opts.restart else 0.0, 0.0)
-
-    def pipeline(Ks, bs, cs, lbs, ubs):
-        prepped = jax.vmap(prep_one)(Ks, bs, cs, lbs, ubs)
-        (Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos, D1s, D2s) = prepped
-        solver = functools.partial(_single_solve, opts_static=opts_static)
-        xs, ys, its, merits = jax.vmap(solver)(
-            Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos)
-        return D2s * xs, D1s * ys, its, merits
-
+    pipeline = make_bucket_pipeline(opts)
     batch_sharding = NamedSharding(mesh, P(batch_axes))
-    args = [jax.device_put(a, batch_sharding)
+    args = [jax.device_put(jnp.asarray(a), batch_sharding)
             for a in (Ks, bs, cs, lbs, ubs)]
     xs, ys, its, merits = jax.jit(pipeline)(*args)
     return {
@@ -79,24 +51,3 @@ def solve_batch(
         "merit": np.asarray(merits),
         "converged": np.asarray(merits) <= opts.tol,
     }
-
-
-def stack_problems(lps) -> tuple:
-    """Pad a list of StandardLPs to a common shape and stack."""
-    m = max(lp.K.shape[0] for lp in lps)
-    n = max(lp.K.shape[1] for lp in lps)
-    Ks, bs, cs, lbs, ubs = [], [], [], [], []
-    for lp in lps:
-        mi, ni = lp.K.shape
-        K = np.zeros((m, n))
-        K[:mi, :ni] = lp.K
-        b = np.zeros(m)
-        b[:mi] = lp.b
-        c = np.zeros(n)
-        c[:ni] = lp.c
-        lb = np.zeros(n)
-        ub = np.zeros(n)           # padding pinned at 0
-        lb[:ni] = lp.lb
-        ub[:ni] = lp.ub
-        Ks.append(K); bs.append(b); cs.append(c); lbs.append(lb); ubs.append(ub)
-    return tuple(np.stack(a) for a in (Ks, bs, cs, lbs, ubs))

@@ -35,6 +35,7 @@ from ..core import pdhg as pdhg_mod
 from ..core.pdhg import PDHGOptions, PDHGResult
 from ..core.residuals import KKTResiduals
 from ..lp.problem import StandardLP
+from ..runtime import compat
 from .sharding import axis_size, col_axes, pad_to_multiple, row_axes
 
 
@@ -175,7 +176,7 @@ def make_dist_step(mesh: Mesh, n_inner: int = 1, gamma: float = 0.0):
         return state
 
     vec_r, vec_c = P(Rax), P(Cax)
-    return jax.shard_map(
+    return compat.shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(Rax, Cax), vec_r, vec_c, vec_c, vec_c, vec_c, vec_r,
@@ -274,7 +275,7 @@ def solve_dist(
         return x, y, it, merit
 
     vec_r, vec_c = P(Rax), P(Cax)
-    solve_fn = jax.jit(jax.shard_map(
+    solve_fn = jax.jit(compat.shard_map(
         local_solve,
         mesh=mesh,
         in_specs=(P(Rax, Cax), vec_r, vec_c, vec_c, vec_c, vec_c, vec_r),

@@ -1,5 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.runtime.compat import request_cpu_devices
+assert request_cpu_devices(512), \
+    "JAX backend initialized before repro.launch.dryrun import"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -23,6 +24,7 @@ Usage:
 import argparse
 import dataclasses
 import json
+import os
 import time
 import traceback
 
@@ -40,7 +42,8 @@ from ..configs import (
     get_config,
     input_specs,
 )
-from ..launch.mesh import make_production_mesh
+from ..runtime import compat
+from ..runtime.mesh import make_production_mesh
 from ..launch import hlo as hlo_mod
 from ..models import lm as lm_mod
 from ..train.serve_step import make_prefill_step, make_serve_step
@@ -300,7 +303,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     tag = f"{arch}_{shape_name}_{mesh_name}{tag_suffix}"
     path = os.path.join(out_dir, f"{tag}.json")
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.sharding.set_mesh(mesh)
+    compat.set_mesh(mesh)
     try:
         if arch in LP_CONFIGS:
             result = lower_lp_cell(arch, mesh)

@@ -1,22 +1,13 @@
-"""Production mesh construction (NEVER touches jax device state on import)."""
+"""Back-compat shim: mesh construction moved to ``repro.runtime.mesh``.
+
+Kept so existing imports (tests, examples, benchmarks) keep working;
+new code should import from ``repro.runtime`` directly.  NEVER touches
+jax device state on import.
+"""
 from __future__ import annotations
 
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips/pod; multi_pod adds a 2-pod leading axis (512)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
-
-
-def make_mesh(shape, axes):
-    """General mesh helper for tests/examples (e.g. (2, 4) on 8 CPUs)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+from ..runtime.mesh import (  # noqa: F401
+    make_local_mesh,
+    make_mesh,
+    make_production_mesh,
+)

@@ -6,6 +6,8 @@
       --backend exact         # jitted dense PDHG
   PYTHONPATH=src python -m repro.launch.solve --instance rand:96x160 \
       --backend distributed   # shard_map PDHG on all local devices
+  PYTHONPATH=src python -m repro.launch.solve --backend batch \
+      --instances rand:8x14,rand:10x18,rand:24x40   # bucketed stream
 """
 from __future__ import annotations
 
@@ -21,6 +23,8 @@ from ..lp import (
     random_standard_lp,
     table1_instance,
 )
+from ..runtime import solve_stream
+from ..runtime.mesh import make_local_mesh
 
 
 def load_instance(spec: str, seed: int = 0):
@@ -37,17 +41,35 @@ def load_instance(spec: str, seed: int = 0):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--instance", default="gen-ip002")
+    ap.add_argument("--instances", default=None,
+                    help="comma-separated specs for --backend batch")
     ap.add_argument("--backend", default="exact",
-                    choices=["exact", "epiram", "taox", "distributed"])
+                    choices=["exact", "epiram", "taox", "distributed",
+                             "batch"])
     ap.add_argument("--tol", type=float, default=1e-6)
     ap.add_argument("--max-iters", type=int, default=40000)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     jax.config.update("jax_enable_x64", True)
-    lp = load_instance(args.instance, seed=args.seed)
     opts = PDHGOptions(max_iters=args.max_iters, tol=args.tol,
                        check_every=100)
+    if args.backend == "batch":
+        specs = (args.instances or args.instance).split(",")
+        lps = [load_instance(s.strip(), seed=args.seed + i)
+               for i, s in enumerate(specs)]
+        results = solve_stream(lps, opts)
+        for lp, r in zip(lps, results):
+            line = (f"instance={r.name} shape={lp.K.shape} "
+                    f"bucket={r.bucket} status={r.status} "
+                    f"iters={r.iterations} objective={r.obj:.6f}")
+            if lp.obj_opt is not None:
+                rel = abs(r.obj - lp.obj_opt) / max(abs(lp.obj_opt), 1e-12)
+                line += f" (known optimum {lp.obj_opt:.6f}, rel err {rel:.2e})"
+            print(line)
+        return results
+
+    lp = load_instance(args.instance, seed=args.seed)
     if args.backend == "exact":
         res = solve_jit(lp, opts)
         led = None
@@ -57,12 +79,7 @@ def main(argv=None):
         res, led = rep.result, rep.ledger
     else:
         from ..distributed.pdhg_dist import solve_dist
-        n_dev = len(jax.devices())
-        rows = max(1, n_dev // 2)
-        cols = max(1, n_dev // rows)
-        mesh = jax.make_mesh(
-            (rows, cols), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_local_mesh()
         res = solve_dist(lp, mesh, opts)
         led = None
 

@@ -15,35 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def constrain(x, *spec):
-    """with_sharding_constraint that no-ops without an active mesh.
-
-    Axes absent from the mesh are dropped; non-divisible dims are padded
-    internally by GSPMD (e.g. 40 heads on a 16-way axis).
-    """
-    from jax.sharding import PartitionSpec as P
-
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
-        return x
-    names = mesh.axis_names
-    clean = []
-    for s in spec:
-        if s is None:
-            clean.append(None)
-        elif isinstance(s, tuple):
-            t = tuple(a for a in s if a in names)
-            clean.append(t if t else None)
-        else:
-            clean.append(s if s in names else None)
-    return jax.lax.with_sharding_constraint(x, P(*clean))
-
-
-def batch_axes():
-    mesh = jax.sharding.get_abstract_mesh()
-    names = mesh.axis_names if mesh is not None else ()
-    return tuple(a for a in ("pod", "data") if a in names)
+# Ambient-mesh-aware sharding annotations live in the runtime layer so
+# they work on every supported JAX version (0.4.x lacks the explicit-
+# sharding APIs these used to call directly).
+from ..runtime.compat import batch_axes, constrain
 
 
 def rms_norm(x, gain, eps: float = 1e-6):

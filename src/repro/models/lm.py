@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..runtime import compat
 from . import mla as mla_mod
 from . import moe as moe_mod
 from . import rwkv6 as rwkv_mod
@@ -40,28 +41,10 @@ def _dtype(cfg: ModelConfig):
     return jnp.dtype(cfg.dtype)
 
 
-def _batch_axes():
-    mesh = jax.sharding.get_abstract_mesh()
-    names = mesh.axis_names if mesh is not None else ()
-    return tuple(a for a in ("pod", "data") if a in names)
-
-
-def _constrain(x, *spec):
-    """with_sharding_constraint that degrades to identity without a mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
-        return x
-    names = mesh.axis_names
-    clean = []
-    for s in spec:
-        if s is None:
-            clean.append(None)
-        elif isinstance(s, tuple):
-            t = tuple(a for a in s if a in names)
-            clean.append(t if t else None)
-        else:
-            clean.append(s if s in names else None)
-    return jax.lax.with_sharding_constraint(x, P(*clean))
+# with_sharding_constraint / batch-axis resolution against the ambient
+# mesh, portable across JAX versions (see runtime.compat).
+_batch_axes = compat.batch_axes
+_constrain = compat.constrain
 
 
 def constrain_tokens(x):

@@ -1,0 +1,46 @@
+"""Runtime portability layer: device/mesh/sharding concerns + batching.
+
+Single entry point for everything that touches JAX's (version-volatile)
+device and sharding machinery:
+
+  * ``runtime.compat``  — feature-detected shims over the JAX APIs that
+    moved between 0.4.x and >=0.6 (``AxisType``, ``get_abstract_mesh``,
+    ``set_mesh``/``use_mesh``, top-level ``shard_map``), plus the shared
+    sharding-annotation helpers (``constrain``/``batch_axes``).
+  * ``runtime.mesh``    — one ``make_mesh`` API for every mesh in the
+    repo (tests, local solves, 16x16 / 2x16x16 production dry-runs) with
+    a CPU multi-device fallback for tests.
+  * ``runtime.batch``   — shape-bucketed batch solving of heterogeneous
+    LP streams with a compiled-executable cache per bucket.
+
+No module outside ``runtime.compat`` may reference the volatile
+``jax.sharding`` attributes directly.
+"""
+from . import batch, compat, mesh
+from .batch import BatchSolver, solve_stream
+from .compat import (
+    batch_axes,
+    constrain,
+    get_abstract_mesh,
+    set_mesh,
+    shard_map,
+    use_mesh,
+)
+from .mesh import make_local_mesh, make_mesh, make_production_mesh
+
+__all__ = [
+    "BatchSolver",
+    "batch",
+    "batch_axes",
+    "compat",
+    "constrain",
+    "get_abstract_mesh",
+    "make_local_mesh",
+    "make_mesh",
+    "make_production_mesh",
+    "mesh",
+    "set_mesh",
+    "shard_map",
+    "solve_stream",
+    "use_mesh",
+]

@@ -1,0 +1,212 @@
+"""Version-adaptive JAX compatibility shims (0.4.x <-> >=0.6 APIs).
+
+The sharding surface moved a lot between JAX 0.4.x and the explicit-
+sharding releases: ``jax.sharding.AxisType``, ``get_abstract_mesh``,
+``set_mesh``/``use_mesh`` and top-level ``jax.shard_map`` only exist on
+newer versions, while ``jax.experimental.shard_map`` (with ``check_rep``
+instead of ``check_vma``) only exists on older ones.  Every feature is
+detected once at import; callers use the functions below and never touch
+``jax.sharding`` attributes that may be absent.
+
+On old JAX the "ambient mesh" (what ``get_abstract_mesh`` returns on new
+JAX) is emulated with a thread-local set by ``set_mesh``/``use_mesh``,
+falling back to the legacy ``with mesh:`` context if one is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+import os
+import re
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------- feature flags ---
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+HAS_SET_MESH = hasattr(jax.sharding, "set_mesh")
+HAS_USE_MESH = hasattr(jax.sharding, "use_mesh")
+HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_MAKE_MESH = hasattr(jax, "make_mesh")  # added in jax 0.4.35
+_MAKE_MESH_TAKES_AXIS_TYPES = HAS_MAKE_MESH and (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def jax_version() -> Tuple[int, ...]:
+    return tuple(int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+
+
+def axis_type_auto():
+    """``AxisType.Auto`` on explicit-sharding JAX; None on 0.4.x."""
+    return jax.sharding.AxisType.Auto if HAS_AXIS_TYPE else None
+
+
+# ------------------------------------------------------------------ mesh ---
+
+class _MeshState(threading.local):
+    def __init__(self):
+        self.mesh = None
+
+
+_STATE = _MeshState()
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None, axis_types=None):
+    """``jax.make_mesh`` that tolerates the missing ``axis_types`` kwarg.
+
+    Pre-0.4.35 JAX has no ``jax.make_mesh`` at all; there the mesh is
+    assembled directly from ``mesh_utils.create_device_mesh``.
+    """
+    shape, names = tuple(axis_shapes), tuple(axis_names)
+    if not HAS_MAKE_MESH:
+        import math
+
+        from jax.experimental import mesh_utils
+
+        if devices is None:
+            devices = jax.devices()[:math.prod(shape)]
+        grid = mesh_utils.create_device_mesh(shape, devices=list(devices))
+        return jax.sharding.Mesh(grid, names)
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _MAKE_MESH_TAKES_AXIS_TYPES:
+        if axis_types is None and HAS_AXIS_TYPE:
+            axis_types = (axis_type_auto(),) * len(names)
+        if axis_types is not None:
+            kwargs["axis_types"] = axis_types
+    return jax.make_mesh(shape, names, **kwargs)
+
+
+def get_abstract_mesh():
+    """The ambient mesh: AbstractMesh on new JAX, Mesh (or None) on old.
+
+    Returned objects always expose ``.axis_names`` and ``.empty``; callers
+    must treat both None and ``.empty`` as "no mesh".
+    """
+    if HAS_GET_ABSTRACT_MESH:
+        return jax.sharding.get_abstract_mesh()
+    if _STATE.mesh is not None:
+        return _STATE.mesh
+    try:  # legacy `with mesh:` context, if someone opened one
+        from jax._src import mesh as _mesh_internal
+        pm = _mesh_internal.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:  # noqa: BLE001 - internals may move; absence is fine
+        pass
+    return None
+
+
+def set_mesh(mesh) -> None:
+    """Install ``mesh`` as the ambient mesh (process-wide intent)."""
+    if HAS_SET_MESH:
+        jax.sharding.set_mesh(mesh)
+    else:
+        _STATE.mesh = mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Scoped ambient mesh (restores the previous one on exit)."""
+    if HAS_USE_MESH:
+        with jax.sharding.use_mesh(mesh):
+            yield mesh
+    else:
+        prev, _STATE.mesh = _STATE.mesh, mesh
+        try:
+            yield mesh
+        finally:
+            _STATE.mesh = prev
+
+
+def mesh_axis_names() -> Tuple[str, ...]:
+    mesh = get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return ()
+    return tuple(mesh.axis_names)
+
+
+# ------------------------------------------------- sharding annotations ---
+
+def clean_spec(spec, names) -> P:
+    """Drop spec axes absent from ``names`` (e.g. 'pod' on single-pod)."""
+    clean = []
+    for s in spec:
+        if s is None:
+            clean.append(None)
+        elif isinstance(s, tuple):
+            t = tuple(a for a in s if a in names)
+            clean.append(t if t else None)
+        else:
+            clean.append(s if s in names else None)
+    return P(*clean)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that no-ops without an ambient mesh.
+
+    Axes absent from the mesh are dropped; non-divisible dims are padded
+    internally by GSPMD (e.g. 40 heads on a 16-way axis).  On old JAX the
+    ambient mesh is concrete, so the spec is resolved to a NamedSharding
+    (bare PartitionSpecs need mesh-context machinery 0.4.x lacks).
+    """
+    mesh = get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    pspec = clean_spec(spec, mesh.axis_names)
+    if isinstance(mesh, jax.sharding.Mesh):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+    return jax.lax.with_sharding_constraint(x, pspec)
+
+
+def batch_axes() -> Tuple[str, ...]:
+    """The data-parallel axes present on the ambient mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh_axis_names())
+
+
+# ------------------------------------------------------------ shard_map ---
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Top-level ``jax.shard_map`` or the 0.4.x experimental fallback.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name).
+    """
+    if HAS_TOPLEVEL_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+# -------------------------------------------------- CPU device fan-out ---
+
+def request_cpu_devices(n: int) -> bool:
+    """Ask XLA for ``n`` host-platform (CPU) devices.
+
+    Must run before the first device query in the process (the flag is
+    read at backend initialization).  Returns False when the backend is
+    already up, in which case the caller should re-exec in a subprocess.
+    """
+    flag = f"--xla_force_host_platform_device_count={n}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in cur:
+        # rewrite a pre-existing (possibly different) count in place
+        cur = re.sub(r"--xla_force_host_platform_device_count=\d+",
+                     flag, cur)
+        os.environ["XLA_FLAGS"] = cur
+    else:
+        os.environ["XLA_FLAGS"] = (cur + " " + flag).strip()
+    try:
+        from jax._src import xla_bridge
+        return not xla_bridge.backends_are_initialized()
+    except Exception:  # noqa: BLE001 - optimistically assume it took effect
+        return True

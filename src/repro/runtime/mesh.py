@@ -1,0 +1,78 @@
+"""One mesh-construction API for the whole repo.
+
+Absorbs the logic that used to live in ``launch/mesh.py`` (production
+16x16 / 2x16x16 grids) and ``launch/solve.py`` (ad-hoc local meshes):
+
+    make_mesh({"data": 2, "model": 4})              # preferred form
+    make_mesh((2, 4), ("data", "model"))            # legacy positional
+    make_mesh({"data": 8}, backend="cpu")           # platform-filtered
+    make_local_mesh()                               # all local devices
+
+Device-count errors point at the CPU multi-device fallback
+(``compat.request_cpu_devices`` / XLA_FLAGS) instead of XLA's opaque
+reshape failure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+
+from . import compat
+
+AxesSpec = Union[Dict[str, int], Sequence[int]]
+
+
+def _normalize_axes(axes: AxesSpec, names: Optional[Sequence[str]]):
+    if isinstance(axes, dict):
+        return tuple(axes.values()), tuple(axes.keys())
+    axes = tuple(axes)
+    if names is not None:
+        return axes, tuple(names)
+    if axes and isinstance(axes[0], (tuple, list)):  # [("data", 2), ...]
+        return tuple(int(s) for _, s in axes), tuple(a for a, _ in axes)
+    raise TypeError(
+        "make_mesh expects a {name: size} dict, (shape, names), or a "
+        f"sequence of (name, size) pairs; got {axes!r}")
+
+
+def make_mesh(axes: AxesSpec, names: Optional[Sequence[str]] = None, *,
+              backend: Optional[str] = None, devices=None):
+    """Build a Mesh on any supported JAX, with readable capacity errors."""
+    shape, axis_names = _normalize_axes(axes, names)
+    needed = math.prod(shape)
+    if devices is None:
+        devices = jax.devices(backend) if backend is not None else None
+    avail = len(devices) if devices is not None else len(jax.devices())
+    if needed > avail:
+        raise RuntimeError(
+            f"mesh {dict(zip(axis_names, shape))} needs {needed} devices "
+            f"but only {avail} are visible"
+            + (f" on backend {backend!r}" if backend else "")
+            + "; for CPU tests set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={needed} before the "
+            "first device query (repro.runtime.compat.request_cpu_devices)")
+    if devices is not None:
+        devices = list(devices)[:needed]
+    return compat.make_mesh(shape, axis_names, devices=devices)
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         backend: Optional[str] = None):
+    """16x16 = 256 chips/pod; multi_pod adds a 2-pod leading axis (512)."""
+    if multi_pod:
+        return make_mesh({"pod": 2, "data": 16, "model": 16},
+                         backend=backend)
+    return make_mesh({"data": 16, "model": 16}, backend=backend)
+
+
+def make_local_mesh(axis_names: Tuple[str, str] = ("data", "model"), *,
+                    backend: Optional[str] = None):
+    """Near-square 2-D mesh over all visible devices (local solves)."""
+    n_dev = len(jax.devices(backend) if backend else jax.devices())
+    rows = max(1, n_dev // 2)
+    while n_dev % rows:
+        rows -= 1
+    cols = n_dev // rows
+    return make_mesh((rows, cols), axis_names, backend=backend)

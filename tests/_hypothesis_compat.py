@@ -1,0 +1,83 @@
+"""Optional-``hypothesis`` shim for the property-based test modules.
+
+When ``hypothesis`` is installed (the ``[test]`` extra), this module
+re-exports the real ``given``/``settings``/``strategies``.  Otherwise it
+provides a minimal deterministic stand-in: ``@given`` draws
+``max_examples`` pseudo-random examples from a fixed-seed RNG and calls
+the test once per example.  No shrinking, no database — just enough for
+the KKT/theory property sweeps to run (and fail meaningfully) without
+the dependency.
+"""
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import types
+
+    _DEFAULT_EXAMPLES = 10
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _tuples(*strategies):
+        return _Strategy(
+            lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+    st = types.SimpleNamespace(
+        integers=_integers,
+        floats=_floats,
+        tuples=_tuples,
+        sampled_from=_sampled_from,
+        booleans=_booleans,
+    )
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(_SEED)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # pytest must not see the drawn parameters as fixtures: hide
+            # the original signature and expose only the leftover params
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            # keep a settings() applied below @given (functools.wraps
+            # already copied fn._max_examples onto the wrapper)
+            wrapper._max_examples = getattr(
+                fn, "_max_examples", _DEFAULT_EXAMPLES)
+            return wrapper
+        return deco

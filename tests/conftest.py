@@ -1,8 +1,42 @@
 """Shared fixtures.  NOTE: never set xla_force_host_platform_device_count
 here — smoke tests and benches must see the real single device; only the
 dry-run subprocess uses 512 fake devices."""
+import os
+
 import jax
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (subprocess dry-runs, multi-device)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
+def repo_root():
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def subprocess_env():
+    """Environment for ``python -m repro...`` / -c subprocess tests.
+
+    The repo's ``src`` must be importable regardless of the caller's cwd,
+    so the path is absolute and any pre-existing PYTHONPATH is preserved.
+    """
+    env = dict(os.environ)
+    src = os.path.join(repo_root(), "src")
+    extra = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + extra if extra else "")
+    return env
 
 
 @pytest.fixture

@@ -93,16 +93,17 @@ def test_quantize_roundtrip():
 
 
 MULTIDEV_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.runtime import compat
+    assert compat.request_cpu_devices(8), "backend initialized too early"
     import jax
     jax.config.update("jax_enable_x64", True)
     import numpy as np
     from repro.lp import random_standard_lp
     from repro.core import PDHGOptions, solve_jit
     from repro.distributed.pdhg_dist import solve_dist
-    from repro.launch.mesh import make_mesh
+    from repro.runtime.mesh import make_mesh
 
+    assert len(jax.devices()) == 8
     lp = random_standard_lp(24, 40, seed=11)
     opts = PDHGOptions(max_iters=20000, tol=1e-6, check_every=64)
     r_single = solve_jit(lp, opts)
@@ -120,14 +121,10 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
 @pytest.mark.slow
 def test_distributed_solve_multidevice_subprocess():
     """2-axis and 3-axis sharded PDHG on 8 fake devices == known optimum."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    from conftest import repo_root, subprocess_env
+
     proc = subprocess.run(
-        [sys.executable, "-c", MULTIDEV_SCRIPT], env=env, cwd=_repo_root(),
-        capture_output=True, text=True, timeout=900,
+        [sys.executable, "-c", MULTIDEV_SCRIPT], env=subprocess_env(),
+        cwd=repo_root(), capture_output=True, text=True, timeout=900,
     )
     assert "MULTIDEV PASS" in proc.stdout, proc.stdout + proc.stderr
-
-
-def _repo_root():
-    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

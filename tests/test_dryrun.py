@@ -11,21 +11,21 @@ import sys
 
 import pytest
 
-
-def _repo_root():
-    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from conftest import repo_root as _repo_root
+from conftest import subprocess_env
 
 
 def _run_dryrun(args, out_dir):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", *args,
          "--out", out_dir],
-        env=env, cwd=_repo_root(), capture_output=True, text=True,
-        timeout=1200,
+        env=subprocess_env(), cwd=_repo_root(), capture_output=True,
+        text=True, timeout=1200,
     )
     assert proc.returncode == 0, proc.stdout + proc.stderr
+    # import noise (a module failing to load) would surface as a FAIL
+    # cell; the driver itself must report every requested cell
+    assert "[OK]" in proc.stdout or "[SKIP]" in proc.stdout, proc.stdout
     return proc.stdout
 
 
@@ -39,6 +39,8 @@ def test_dryrun_lp_cell_both_meshes(tmp_path):
         with open(path) as f:
             cell = json.load(f)
         assert "error" not in cell, cell
+        # the runtime mesh layer built the grid the cell reports
+        assert cell["mesh"] == mesh
         assert cell["n_chips"] == (256 if mesh == "16x16" else 512)
         assert cell["memory"]["peak_per_device_bytes"] > 0
         assert cell["roofline"]["bottleneck"] in (
@@ -54,6 +56,7 @@ def test_dryrun_lm_decode_cell_multipod(tmp_path):
     with open(path) as f:
         cell = json.load(f)
     assert "error" not in cell, cell
+    assert cell["mesh"] == "2x16x16"
     assert cell["n_chips"] == 512
     assert cell["collectives"]["total_bytes"] > 0
     # fits a 16 GiB HBM budget

@@ -7,7 +7,7 @@ dual feasibility, complementary slackness — so the "known optimum" label
 is earned, not assumed.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.lp import (
     TABLE1_SIZES,

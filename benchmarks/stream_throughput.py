@@ -1,0 +1,210 @@
+"""Stream-throughput benchmark: bucketed batched serving vs. per-instance.
+
+The ROADMAP benchmark item: compare bucketed stream throughput against
+per-instance solves on a realistic mixed-shape LP stream, for both the
+exact jitted path and the crossbar device-physics path, and record the
+energy-ledger totals the device path accumulates (write split into
+logical vs. padding cells, so the tile-alignment overhead is visible).
+
+Per-instance baselines replicate what serving without the batch scheduler
+looks like: a Python loop calling the jitted single-instance solver on
+each (bucket-padded) instance — jit caching still applies per shape, so
+the comparison isolates batching, not compilation.
+
+  PYTHONPATH=src python benchmarks/stream_throughput.py --smoke
+  PYTHONPATH=src python benchmarks/stream_throughput.py \
+      --instances 32 --device taox --out experiments/stream_throughput.json
+
+Each timed path runs twice: COLD includes compilation, WARM is the
+steady-state serving cost (the number that matters for throughput).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+SMOKE_SHAPES = [(8, 14), (10, 18), (20, 34), (12, 24), (7, 13), (16, 28)]
+FULL_SHAPES = [(8, 14), (10, 18), (20, 34), (12, 24), (7, 13), (16, 28),
+               (40, 70), (28, 52), (56, 96), (24, 44)]
+
+
+def build_stream(n_instances: int, shapes, seed: int = 0):
+    from repro.lp import random_standard_lp
+
+    lps = []
+    for i in range(n_instances):
+        m, n = shapes[i % len(shapes)]
+        lps.append(random_standard_lp(m, n, seed=seed + i))
+    return lps
+
+
+def _sum_ledgers(reports):
+    total = {}
+    for rep in reports:
+        for k, v in rep.ledger.as_dict().items():
+            total[k] = total.get(k, 0.0) + v
+    return total
+
+
+def bench_exact(lps, opts):
+    """Bucketed BatchSolver vs. a per-instance solve_jit loop."""
+    from repro.core import solve_jit
+    from repro.runtime import BatchSolver
+    from repro.runtime.batch import bucket_dims, pad_problem
+
+    def per_instance():
+        objs = []
+        for lp in lps:
+            padded = pad_problem(lp, *bucket_dims(*lp.K.shape))
+            objs.append(solve_jit(padded, opts).obj)
+        return objs
+
+    timings = {}
+    t0 = time.time(); objs_loop = per_instance()
+    timings["per_instance_cold_s"] = time.time() - t0
+    t0 = time.time(); per_instance()
+    timings["per_instance_warm_s"] = time.time() - t0
+
+    solver = BatchSolver(opts)
+    t0 = time.time(); results = solver.solve_stream(lps)
+    timings["batched_cold_s"] = time.time() - t0
+    t0 = time.time(); solver.solve_stream(lps)
+    timings["batched_warm_s"] = time.time() - t0
+
+    gaps = [abs(r.obj - lp.obj_opt) / abs(lp.obj_opt)
+            for lp, r in zip(lps, results)]
+    return {
+        **timings,
+        "speedup_warm": timings["per_instance_warm_s"]
+        / max(timings["batched_warm_s"], 1e-12),
+        "cache": solver.cache_info(),
+        "buckets": sorted({str(r.bucket) for r in results}),
+        "max_rel_gap": float(max(gaps)),
+        "max_rel_disagreement_vs_loop": float(max(
+            abs(r.obj - o) / max(abs(o), 1e-12)
+            for r, o in zip(results, objs_loop))),
+    }
+
+
+def bench_device(lps, opts, device):
+    """CrossbarBatchSolver vs. a per-instance solve_crossbar_jit loop.
+
+    The loop pads each instance to the same device-tile bucket the batch
+    path uses (a crossbar burns whole tiles either way), so the delta is
+    pure batching + dispatch, not array size.
+    """
+    import jax
+    from repro.crossbar import CrossbarBatchSolver, solve_crossbar_jit
+    from repro.runtime.batch import bucket_dims, pad_problem
+
+    tile = (device.crossbar_rows, device.crossbar_cols)
+
+    def per_instance():
+        reports = []
+        for i, lp in enumerate(lps):
+            padded = pad_problem(lp, *bucket_dims(*lp.K.shape, tile=tile))
+            reports.append(solve_crossbar_jit(
+                padded, opts, device=device,
+                key=jax.random.PRNGKey(opts.seed + i)))
+        return reports
+
+    timings = {}
+    t0 = time.time(); loop_reports = per_instance()
+    timings["per_instance_cold_s"] = time.time() - t0
+    t0 = time.time(); loop_reports = per_instance()
+    timings["per_instance_warm_s"] = time.time() - t0
+
+    solver = CrossbarBatchSolver(opts, device=device)
+    t0 = time.time(); reports = solver.solve_stream(lps)
+    timings["batched_cold_s"] = time.time() - t0
+    t0 = time.time(); reports = solver.solve_stream(lps)
+    timings["batched_warm_s"] = time.time() - t0
+
+    gaps = [abs(rep.result.obj - lp.obj_opt) / abs(lp.obj_opt)
+            for lp, rep in zip(lps, reports)]
+    return {
+        **timings,
+        "speedup_warm": timings["per_instance_warm_s"]
+        / max(timings["batched_warm_s"], 1e-12),
+        "cache": solver.cache_info(),
+        "max_rel_gap": float(max(gaps)),
+        "ledger_batched": _sum_ledgers(reports),
+        "ledger_per_instance": _sum_ledgers(loop_reports),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small stream + loose tolerance (CI)")
+    ap.add_argument("--instances", type=int, default=None,
+                    help="stream length (default: 16 smoke / 32 full)")
+    ap.add_argument("--device", default="epiram",
+                    choices=["epiram", "taox"])
+    ap.add_argument("--max-iters", type=int, default=None)
+    ap.add_argument("--tol", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default under experiments/)")
+    args = ap.parse_args(argv)
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import PDHGOptions
+    from repro.crossbar import DEVICES
+
+    n = args.instances if args.instances is not None \
+        else (16 if args.smoke else 32)
+    shapes = SMOKE_SHAPES if args.smoke else FULL_SHAPES
+    max_iters = args.max_iters if args.max_iters is not None \
+        else (2000 if args.smoke else 20000)
+    # the device path bottoms out at the read-noise floor; don't ask the
+    # while_loop to chase an unreachable tolerance in smoke mode
+    tol = args.tol if args.tol is not None else (1e-3 if args.smoke else 1e-5)
+    device = DEVICES["EpiRAM" if args.device == "epiram" else "TaOx-HfOx"]
+    opts = PDHGOptions(max_iters=max_iters, tol=tol, check_every=64,
+                       lanczos_iters=16 if args.smoke else 48,
+                       seed=args.seed)
+
+    lps = build_stream(n, shapes, seed=args.seed)
+    record = {
+        "config": {
+            "n_instances": n, "shapes": [list(s) for s in shapes],
+            "max_iters": max_iters, "tol": tol, "device": device.name,
+            "tile": [device.crossbar_rows, device.crossbar_cols],
+            "smoke": bool(args.smoke), "seed": args.seed,
+            "jax": jax.__version__,
+        },
+        "exact": bench_exact(lps, opts),
+        "crossbar": bench_device(lps, opts, device),
+    }
+
+    out = args.out or os.path.join(
+        "experiments",
+        "stream_throughput_smoke.json" if args.smoke
+        else "stream_throughput.json")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(record, f, indent=1)
+
+    for path in ("exact", "crossbar"):
+        r = record[path]
+        print(f"[{path}] per-instance warm {r['per_instance_warm_s']:.3f}s"
+              f" | batched warm {r['batched_warm_s']:.3f}s"
+              f" | speedup {r['speedup_warm']:.2f}x"
+              f" | max rel gap {r['max_rel_gap']:.2e}"
+              f" | cache {r['cache']}")
+    led = record["crossbar"]["ledger_batched"]
+    print(f"[crossbar] stream write={led['write_energy_j']:.3f}J "
+          f"(padding {led['write_energy_padding_j']:.3f}J) "
+          f"read={led['read_energy_j']:.3f}J mvms={led['mvm_count']:.0f}")
+    print(f"wrote {out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -218,10 +218,16 @@ def solve(
                 status = "diverged"
                 break
             if opts.restart and avg_len > 0:
+                # fresh keys: reusing k3/k4 here would correlate the read
+                # noise between the current- and averaged-iterate checks
+                if use_keys:
+                    key, k5, k6 = jax.random.split(key, 3)
+                else:
+                    k5 = k6 = None
                 x_avg = x_sum / avg_len
                 y_avg = y_sum / avg_len
-                Kxa = matmul_accel(accel, x_avg, MODE_AX, key=k3)
-                KTya = matmul_accel(accel, y_avg, MODE_ATY, key=k4)
+                Kxa = matmul_accel(accel, x_avg, MODE_AX, key=k5)
+                KTya = matmul_accel(accel, y_avg, MODE_ATY, key=k6)
                 res_avg = kkt_residuals(
                     x_avg, x_avg, y_avg, scaled.c, scaled.b, Kxa, KTya,
                     lb=scaled.lb, ub=scaled.ub,
@@ -279,6 +285,16 @@ def solve(
 # batches with residual-based early exit via lax.while_loop).
 # --------------------------------------------------------------------------
 
+def opts_static(opts: PDHGOptions, sigma_read: float = 0.0) -> tuple:
+    """The hashable option tuple ``_solve_jit_core`` consumes (positional
+    unpack — keep in sync with the head of that function, and nowhere
+    else: ``solve_jit`` and ``runtime.batch`` both build it through
+    here)."""
+    return (opts.max_iters, opts.tol, opts.eta, opts.omega, opts.gamma,
+            opts.check_every, opts.restart_beta if opts.restart else 0.0,
+            float(sigma_read))
+
+
 def _solve_jit_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key,
                     opts_static):
     """K_fwd ~ K (dual step), K_adj ~ K^T (primal step).
@@ -294,7 +310,7 @@ def _solve_jit_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key,
     dt = K_fwd.dtype
     tau0 = eta / (omega * rho)
     sigma0 = eta * omega / rho
-    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    key, kx, ky = jax.random.split(key, 3)
     x0 = jnp.clip(jax.random.normal(kx, (n,), dt), lb, ub)
     y0 = jax.random.normal(ky, (m,), dt)
 
@@ -397,10 +413,7 @@ def solve_jit(
             # Lemma 2 safety: widen the margin by the noise bound so the
             # coupling holds for the true norm despite the noisy estimate.
             rho = rho / (1.0 - min(4.0 * sigma_read, 0.5))
-    static = (opts.max_iters, opts.tol, opts.eta, opts.omega, opts.gamma,
-              opts.check_every,
-              opts.restart_beta if opts.restart else 0.0,
-              float(sigma_read))
+    static = opts_static(opts, sigma_read)
     core = jax.jit(_solve_jit_core, static_argnums=(10,))
     x, y, it, merit = core(
         Kf, Ka, scaled.b, scaled.c, scaled.lb, scaled.ub, T, Sigma, rho,
@@ -412,10 +425,17 @@ def solve_jit(
         x, x, y, scaled.c, scaled.b, scaled.K @ x, scaled.K.T @ y,
         lb=scaled.lb, ub=scaled.ub,
     )
+    # Device-MVM accounting aligned with the host path (``accel.stats``):
+    # Lanczos (1 MVM/iter, skipped under norm_override) + PDHG (2/iter) +
+    # residual checks (4 per check: x/y pair for the current AND the
+    # averaged iterate — the jitted body always evaluates both).
+    it_i = int(it)
+    lanczos_mvms = 0 if opts.norm_override is not None else opts.lanczos_iters
+    n_checks = max(1, it_i // max(1, opts.check_every))
     return PDHGResult(
         status="optimal" if float(merit) <= opts.tol else "iteration_limit",
         x=x_orig, y=y_orig, obj=float(lp.c @ x_orig),
-        iterations=int(it), residuals=res, sigma_max=float(rho),
-        lanczos_iters=opts.lanczos_iters,
-        mvm_calls=2 * int(it),
+        iterations=it_i, residuals=res, sigma_max=float(rho),
+        lanczos_iters=lanczos_mvms,
+        mvm_calls=lanczos_mvms + 2 * it_i + 4 * n_checks,
     )

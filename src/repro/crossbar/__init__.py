@@ -1,19 +1,29 @@
 """MELISO+-style crossbar device simulation substrate."""
 from .device import DEVICES, EPIRAM, TAOX_HFOX, DeviceModel
-from .encode import EncodedMatrix, encode_matrix, write_verify_error
+from .encode import (
+    EncodedMatrix,
+    charge_write,
+    encode_core,
+    encode_matrix,
+    write_verify_error,
+)
 from .energy import Ledger
 from .array import CrossbarArray, analog_linear, crossbar_accel_factory
 from .gpu import RTX6000, GPUModel
 from .solver import (
+    CrossbarBatchSolver,
     CrossbarSolveReport,
+    make_crossbar_bucket_pipeline,
     solve_crossbar_jit,
     solve_crossbar_stream,
 )
 
 __all__ = [
     "DEVICES", "EPIRAM", "TAOX_HFOX", "DeviceModel",
-    "EncodedMatrix", "encode_matrix", "write_verify_error",
+    "EncodedMatrix", "charge_write", "encode_core", "encode_matrix",
+    "write_verify_error",
     "Ledger", "CrossbarArray", "analog_linear", "crossbar_accel_factory",
-    "RTX6000", "GPUModel", "CrossbarSolveReport", "solve_crossbar_jit",
+    "RTX6000", "GPUModel", "CrossbarBatchSolver", "CrossbarSolveReport",
+    "make_crossbar_bucket_pipeline", "solve_crossbar_jit",
     "solve_crossbar_stream",
 ]

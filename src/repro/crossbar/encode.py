@@ -12,6 +12,20 @@ relative std ``sigma_program`` (device-to-device variability floor).  The
 expected pulse count per cell drives the programming energy/latency ledger
 entries — this is the "expensive writes" the encode-once strategy
 amortizes.
+
+Two layers:
+  * ``encode_core``    — the pure device-physics map (quantize + residual
+                         programming error), traced-scalar statistics
+                         only.  Safe under ``jax.vmap`` — the batched
+                         crossbar stream programs a whole (B, R, C) stack
+                         of operators in one compiled call.
+  * ``encode_matrix``  — eager single-matrix wrapper: tile padding,
+                         ``EncodedMatrix`` handle, ledger side effects.
+
+Ledger entries split LOGICAL cells (the operator itself) from PADDING
+cells (programmed only because tiles/buckets are larger than the
+operator; all-zero targets, one RESET pulse each), so the overhead of
+device-tile-aligned bucketing is auditable per instance.
 """
 from __future__ import annotations
 
@@ -49,6 +63,65 @@ def _quantize(g: jnp.ndarray, levels: int) -> jnp.ndarray:
     return jnp.round(g * (levels - 1)) / (levels - 1)
 
 
+def encode_core(W: jnp.ndarray, key: jax.Array, g_levels: int,
+                sigma_program: float) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                               jnp.ndarray, jnp.ndarray]:
+    """Pure differential-pair programming model (vmappable).
+
+    ``W`` must already be padded to its physical array shape.  Returns
+    ``(g_pos, g_neg, scale, nz)`` where ``scale`` and ``nz`` (number of
+    nonzero-target differential pairs) are traced scalars — the caller
+    turns them into ledger entries.
+    """
+    raw = jnp.max(jnp.abs(W))
+    scale = jnp.where(raw > 0, raw, 1.0)
+    g_pos_t = jnp.maximum(W, 0.0) / scale
+    g_neg_t = jnp.maximum(-W, 0.0) / scale
+    g_pos_q = _quantize(g_pos_t, g_levels)
+    g_neg_q = _quantize(g_neg_t, g_levels)
+    k1, k2 = jax.random.split(key)
+    # residual programming error (relative, only on nonzero cells)
+    e1 = 1.0 + sigma_program * jax.random.normal(k1, g_pos_q.shape, W.dtype)
+    e2 = 1.0 + sigma_program * jax.random.normal(k2, g_neg_q.shape, W.dtype)
+    g_pos = jnp.clip(g_pos_q * e1, 0.0, 1.0)
+    g_neg = jnp.clip(g_neg_q * e2, 0.0, 1.0)
+    nz = jnp.sum((g_pos_t > 0) | (g_neg_t > 0))
+    return g_pos, g_neg, scale, nz
+
+
+def charge_write(ledger: Ledger, device: DeviceModel, nz: float,
+                 pairs_logical: int, pairs_total: int) -> float:
+    """Accumulate the programming cost of one differential array.
+
+    ``nz`` nonzero-target pairs consume the full write-verify pulse train
+    (2 cells each); zero-target pairs take one RESET pulse per cell.
+    Pairs outside the logical region (tile/bucket padding — always
+    zero-target) are additionally ledgered under the ``*_padding``
+    fields.  Returns the fill fraction (for read-energy accounting).
+    Vectorization-friendly: callers may pass numpy scalars extracted from
+    a batched encode.
+    """
+    nz = float(nz)
+    tr, tc = device.crossbar_rows, device.crossbar_cols
+    fill = nz / pairs_total
+    pulses_logical = (nz * 2 * device.avg_write_pulses
+                      + (2 * pairs_logical - 2 * nz) * 1.0)
+    pulses_padding = 2.0 * (pairs_total - pairs_logical)
+    ledger.write_energy_j += ((pulses_logical + pulses_padding)
+                              * device.write_pulse_energy_j)
+    ledger.write_energy_padding_j += (pulses_padding
+                                      * device.write_pulse_energy_j)
+    # tiles program in parallel; within a tile, cells are row-serial
+    cells_per_tile = tr * tc * 2
+    ledger.write_latency_s += (
+        cells_per_tile * max(fill, 1.0 / (tr * tc))
+        * device.avg_write_pulses * device.write_pulse_latency_s
+    )
+    ledger.cells_written += 2 * pairs_total
+    ledger.cells_written_padding += 2 * (pairs_total - pairs_logical)
+    return fill
+
+
 def encode_matrix(
     W,
     device: DeviceModel,
@@ -67,35 +140,15 @@ def encode_matrix(
     else:
         R, C = rows, cols
         Wp = W
-    scale = float(jnp.max(jnp.abs(Wp))) or 1.0
-    g_pos_t = jnp.maximum(Wp, 0.0) / scale
-    g_neg_t = jnp.maximum(-Wp, 0.0) / scale
-    g_pos_q = _quantize(g_pos_t, device.g_levels)
-    g_neg_q = _quantize(g_neg_t, device.g_levels)
-    k1, k2 = jax.random.split(key)
-    # residual programming error (relative, only on nonzero cells)
-    e1 = 1.0 + device.sigma_program * jax.random.normal(k1, g_pos_q.shape, W.dtype)
-    e2 = 1.0 + device.sigma_program * jax.random.normal(k2, g_neg_q.shape, W.dtype)
-    g_pos = jnp.clip(g_pos_q * e1, 0.0, 1.0)
-    g_neg = jnp.clip(g_neg_q * e2, 0.0, 1.0)
-
-    nz = int(jnp.sum((g_pos_t > 0) | (g_neg_t > 0)))
+    g_pos, g_neg, scale, nz = encode_core(
+        Wp, key, device.g_levels, device.sigma_program)
+    nz = float(nz)
     fill = nz / (R * C)
     if ledger is not None:
-        # only nonzero targets consume verify pulses; zeros need a RESET
-        # pulse each (cheap, count one pulse)
-        zeros = 2 * R * C - 2 * nz
-        pulses = nz * 2 * device.avg_write_pulses + zeros * 1.0
-        ledger.write_energy_j += pulses * device.write_pulse_energy_j
-        # tiles program in parallel; within a tile, cells are row-serial
-        cells_per_tile = tr * tc * 2
-        ledger.write_latency_s += (
-            cells_per_tile * max(fill, 1.0 / (tr * tc))
-            * device.avg_write_pulses * device.write_pulse_latency_s
-        )
-        ledger.cells_written += 2 * R * C
+        fill = charge_write(ledger, device, nz,
+                            pairs_logical=rows * cols, pairs_total=R * C)
     return EncodedMatrix(
-        g_pos=g_pos, g_neg=g_neg, scale=scale, rows=rows, cols=cols,
+        g_pos=g_pos, g_neg=g_neg, scale=float(scale), rows=rows, cols=cols,
         device=device, fill=fill,
     )
 

@@ -17,6 +17,11 @@ class Ledger:
     write_latency_s: float = 0.0
     read_energy_j: float = 0.0
     read_latency_s: float = 0.0
+    # padding share of the WRITE phase (cells programmed only because the
+    # bucket/tile is larger than the logical operator — RESET pulses on
+    # all-zero targets).  Already included in ``write_energy_j``; tracked
+    # separately so bucketing overhead is auditable.
+    write_energy_padding_j: float = 0.0
     # GPU phases
     h2d_energy_j: float = 0.0
     h2d_latency_s: float = 0.0
@@ -27,6 +32,11 @@ class Ledger:
     # counters
     mvm_count: int = 0
     cells_written: int = 0
+    cells_written_padding: int = 0
+
+    @property
+    def write_energy_logical_j(self) -> float:
+        return self.write_energy_j - self.write_energy_padding_j
 
     @property
     def total_energy_j(self) -> float:
@@ -53,4 +63,5 @@ class Ledger:
         d = dataclasses.asdict(self)
         d["total_energy_j"] = self.total_energy_j
         d["total_latency_s"] = self.total_latency_s
+        d["write_energy_logical_j"] = self.write_energy_logical_j
         return d

@@ -43,7 +43,10 @@ def solve_batch(
     batch_sharding = NamedSharding(mesh, P(batch_axes))
     args = [jax.device_put(jnp.asarray(a), batch_sharding)
             for a in (Ks, bs, cs, lbs, ubs)]
-    xs, ys, its, merits = jax.jit(pipeline)(*args)
+    B = args[0].shape[0]
+    keys = jax.device_put(
+        jax.random.split(jax.random.PRNGKey(opts.seed), B), batch_sharding)
+    xs, ys, its, merits = jax.jit(pipeline)(*args, keys)
     return {
         "x": np.asarray(xs),
         "y": np.asarray(ys),

@@ -289,9 +289,15 @@ def solve_dist(
     x_orig = np.asarray(scaled.D2) * x
     y_orig = np.asarray(scaled.D1) * y
     res_obj = KKTResiduals(*([jnp.asarray(float(merit))] * 4))
+    # same accounting as core.pdhg.solve_jit: Lanczos + 2 MVMs/iter +
+    # 4 per residual check (current + averaged iterate pairs)
+    it_i = int(it)
+    lanczos_mvms = 0 if opts.norm_override is not None else opts.lanczos_iters
+    n_checks = max(1, it_i // max(1, opts.check_every))
     return PDHGResult(
         status="optimal" if float(merit) <= opts.tol else "iteration_limit",
         x=x_orig, y=y_orig, obj=float(lp.c @ x_orig),
-        iterations=int(it), residuals=res_obj, sigma_max=rho,
-        lanczos_iters=opts.lanczos_iters, mvm_calls=2 * int(it),
+        iterations=it_i, residuals=res_obj, sigma_max=rho,
+        lanczos_iters=lanczos_mvms,
+        mvm_calls=lanczos_mvms + 2 * it_i + 4 * n_checks,
     )

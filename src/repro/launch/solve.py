@@ -8,6 +8,9 @@
       --backend distributed   # shard_map PDHG on all local devices
   PYTHONPATH=src python -m repro.launch.solve --backend batch \
       --instances rand:8x14,rand:10x18,rand:24x40   # bucketed stream
+  PYTHONPATH=src python -m repro.launch.solve --backend batch \
+      --device epiram --instances rand:8x14,rand:10x18,rand:24x40
+      # device-tile-aware bucketed stream through the crossbar simulator
 """
 from __future__ import annotations
 
@@ -16,7 +19,12 @@ import argparse
 import jax
 
 from ..core.pdhg import PDHGOptions, solve_jit
-from ..crossbar import EPIRAM, TAOX_HFOX, solve_crossbar_jit
+from ..crossbar import (
+    EPIRAM,
+    TAOX_HFOX,
+    solve_crossbar_jit,
+    solve_crossbar_stream,
+)
 from ..lp import (
     TABLE1_SIZES,
     pagerank_lp,
@@ -46,18 +54,43 @@ def main(argv=None):
     ap.add_argument("--backend", default="exact",
                     choices=["exact", "epiram", "taox", "distributed",
                              "batch"])
+    ap.add_argument("--device", default="none",
+                    choices=["none", "epiram", "taox"],
+                    help="with --backend batch: serve the stream through "
+                         "the device-tile-aware crossbar simulator")
     ap.add_argument("--tol", type=float, default=1e-6)
     ap.add_argument("--max-iters", type=int, default=40000)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.device != "none" and args.backend != "batch":
+        ap.error("--device only applies to --backend batch "
+                 "(use --backend epiram/taox for single instances)")
 
     jax.config.update("jax_enable_x64", True)
     opts = PDHGOptions(max_iters=args.max_iters, tol=args.tol,
-                       check_every=100)
+                       check_every=100, seed=args.seed)
     if args.backend == "batch":
         specs = (args.instances or args.instance).split(",")
         lps = [load_instance(s.strip(), seed=args.seed + i)
                for i, s in enumerate(specs)]
+        if args.device != "none":
+            dev = EPIRAM if args.device == "epiram" else TAOX_HFOX
+            reports = solve_crossbar_stream(lps, opts, device=dev)
+            for lp, rep in zip(lps, reports):
+                r, led = rep.result, rep.ledger
+                line = (f"instance={lp.name} shape={lp.K.shape} "
+                        f"device={dev.name} status={r.status} "
+                        f"iters={r.iterations} objective={r.obj:.6f}")
+                if lp.obj_opt is not None:
+                    rel = abs(r.obj - lp.obj_opt) / max(abs(lp.obj_opt),
+                                                        1e-12)
+                    line += (f" (known optimum {lp.obj_opt:.6f}, "
+                             f"rel err {rel:.2e})")
+                line += (f" | write={led.write_energy_j:.4f}J "
+                         f"(padding {led.write_energy_padding_j:.4f}J) "
+                         f"read={led.read_energy_j:.4f}J")
+                print(line)
+            return reports
         results = solve_stream(lps, opts)
         for lp, r in zip(lps, results):
             line = (f"instance={r.name} shape={lp.K.shape} "

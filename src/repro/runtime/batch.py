@@ -6,17 +6,24 @@ and must be served together.  Same-shape stacking (the old
 ``distributed/batch_solve.py`` contract) breaks down there — every new
 ``(m, n)`` would recompile.  This scheduler:
 
-  1. rounds every instance up to a power-of-two ``(m_pad, n_pad)``
-     bucket (padding is exact: extra primal coordinates are pinned at
-     lb=ub=0, extra rows are all-zero with b=0, so the optimum is
-     unchanged),
+  1. rounds every instance up to a ``(m_pad, n_pad)`` bucket (padding is
+     exact: extra primal coordinates are pinned at lb=ub=0, extra rows
+     are all-zero with b=0, so the optimum is unchanged).  Buckets are
+     powers of two by default, or — in device-tile mode — multiples of
+     the physical crossbar tile dimensions (e.g. 64x64 EpiRAM tiles), so
+     padded instances map exactly onto whole tiles and the energy ledger
+     sees the true programmed array,
   2. stacks each bucket and dispatches it through a vmapped jitted PDHG
      pipeline (Ruiz + diagonal preconditioning + Lanczos + while_loop) —
      the zero-collective data-parallel path: with a mesh, instances shard
      across devices and each device solves its slice locally,
-  3. caches the compiled executable per (bucket, batch, dtype, options)
-     signature so repeat traffic never re-lowers, and
+  3. caches the compiled executable per (bucket, batch, dtype, options,
+     noise, device) signature so repeat traffic never re-lowers, and
   4. strips padding and returns per-instance results in input order.
+
+Every instance gets its own PRNG key (derived from ``opts.seed`` and its
+position in the stream), so iterate initialization and read-noise streams
+are decorrelated across a bucket.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core import pdhg as pdhg_mod
 from ..core.pdhg import PDHGOptions
+from ..core.pdhg import opts_static  # noqa: F401  (canonical home; re-export)
 from ..lp.problem import StandardLP
 
 MIN_BUCKET = 8
@@ -39,8 +47,22 @@ MIN_BUCKET = 8
 
 # ------------------------------------------------------------- bucketing ---
 
-def bucket_dims(m: int, n: int, min_size: int = MIN_BUCKET) -> Tuple[int, int]:
-    """Round ``(m, n)`` up to the enclosing power-of-two bucket."""
+def _ceil_to(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def bucket_dims(m: int, n: int, min_size: int = MIN_BUCKET,
+                tile: Optional[Tuple[int, int]] = None) -> Tuple[int, int]:
+    """Round ``(m, n)`` up to its bucket.
+
+    Default mode rounds to the enclosing power of two.  With
+    ``tile=(rows, cols)`` (device-tile mode) dims snap to multiples of the
+    physical crossbar tile instead, so a bucket always fills whole tiles:
+    ``bucket_dims(8, 70, tile=(64, 64)) == (64, 128)``.
+    """
+    if tile is not None:
+        tr, tc = tile
+        return _ceil_to(max(int(m), 1), tr), _ceil_to(max(int(n), 1), tc)
     up = lambda v: max(min_size, 1 << (int(v) - 1).bit_length())  # noqa: E731
     return up(m), up(n)
 
@@ -89,46 +111,60 @@ def stack_problems(lps: Sequence[StandardLP], m: Optional[int] = None,
 
 # -------------------------------------------------------------- pipeline ---
 
-def opts_static(opts: PDHGOptions, sigma_read: float = 0.0) -> tuple:
-    """The hashable option tuple ``core.pdhg._solve_jit_core`` consumes."""
-    return (opts.max_iters, opts.tol, opts.eta, opts.omega, opts.gamma,
-            opts.check_every, opts.restart_beta if opts.restart else 0.0,
-            float(sigma_read))
-
-
-def _single_solve(K, b, c, lb, ub, T, Sigma, rho, static):
+def _single_solve(K, b, c, lb, ub, T, Sigma, rho, key, static):
     return pdhg_mod._solve_jit_core(
-        K, K.T, b, c, lb, ub, T, Sigma, rho, jax.random.PRNGKey(1), static)
+        K, K.T, b, c, lb, ub, T, Sigma, rho, key, static)
+
+
+def prep_scale(K, b, c, lb, ub, opts: PDHGOptions):
+    """Ruiz + diagonal preconditioning (Algorithm 4 step 0), vmappable.
+
+    Returns the scaled problem, the diagonal step scalings (T, Sigma) and
+    the unscaling diagonals (D1, D2).  Operator-norm estimation is NOT
+    included — callers estimate rho on whichever operator they actually
+    execute (exact K here, the programmed crossbar blocks in
+    ``crossbar.solver``).
+    """
+    from ..core.precondition import apply_ruiz, diagonal_precondition
+
+    scaled = apply_ruiz(K, b, c, lb, ub, iters=opts.ruiz_iters)
+    T, Sigma = diagonal_precondition(scaled.K)
+    return (scaled.K, scaled.b, scaled.c, scaled.lb, scaled.ub, T, Sigma,
+            scaled.D1, scaled.D2)
 
 
 def _prep_one(K, b, c, lb, ub, opts: PDHGOptions):
     from ..core.lanczos import lanczos_svd_jit
-    from ..core.precondition import apply_ruiz, diagonal_precondition
     from ..core.symblock import build_sym_block
 
-    scaled = apply_ruiz(K, b, c, lb, ub, iters=opts.ruiz_iters)
-    T, Sigma = diagonal_precondition(scaled.K)
-    Keff = jnp.sqrt(Sigma)[:, None] * scaled.K * jnp.sqrt(T)[None, :]
+    (Ks, bs, cs, lbs, ubs, T, Sigma, D1, D2) = prep_scale(
+        K, b, c, lb, ub, opts)
+    Keff = jnp.sqrt(Sigma)[:, None] * Ks * jnp.sqrt(T)[None, :]
     rho = lanczos_svd_jit(build_sym_block(Keff), k_max=opts.lanczos_iters)
-    return (scaled.K, scaled.b, scaled.c, scaled.lb, scaled.ub, T, Sigma,
-            rho, scaled.D1, scaled.D2)
+    return (Ks, bs, cs, lbs, ubs, T, Sigma, rho, D1, D2)
 
 
-def make_bucket_pipeline(opts: PDHGOptions):
+def make_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
     """vmapped prep + solve over a stacked (B, m, n) bucket.
 
-    Returns (xs, ys, iterations, merits) in the ORIGINAL (unscaled)
-    coordinates.  Pure function of the stacked arrays — safe to jit/AOT.
+    ``keys`` carries one PRNG key per instance (iterate init + read-noise
+    streams).  Returns (xs, ys, iterations, merits) in the ORIGINAL
+    (unscaled) coordinates.  Pure function of the stacked arrays — safe
+    to jit/AOT.
     """
-    static = opts_static(opts)
+    static = opts_static(opts, sigma_read)
 
-    def pipeline(Ks, bs, cs, lbs, ubs):
+    def pipeline(Ks, bs, cs, lbs, ubs, keys):
         prepped = jax.vmap(functools.partial(_prep_one, opts=opts))(
             Ks, bs, cs, lbs, ubs)
         (Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos, D1s, D2s) = prepped
+        if sigma_read > 0.0:
+            # Lemma 2 safety margin under noisy norm estimation (matches
+            # core.pdhg.solve_jit).
+            rhos = rhos / (1.0 - min(4.0 * sigma_read, 0.5))
         solver = functools.partial(_single_solve, static=static)
         xs, ys, its, merits = jax.vmap(solver)(
-            Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos)
+            Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos, keys)
         return D2s * xs, D1s * ys, its, merits
 
     return pipeline
@@ -154,10 +190,6 @@ class BatchItemResult:
         return "optimal" if self.converged else "iteration_limit"
 
 
-def _ceil_to(v: int, mult: int) -> int:
-    return -(-v // mult) * mult
-
-
 class BatchSolver:
     """Shape-bucketing scheduler with a compiled-executable cache.
 
@@ -166,18 +198,41 @@ class BatchSolver:
     bucket pipeline (a cache MISS); every later stream with the same
     signature reuses the executable (a HIT).  ``mesh`` shards the batch
     dimension over ``batch_axes`` — zero collectives during the solve.
+
+    ``tile`` switches bucketing to device-tile mode (multiples of the
+    physical crossbar dims); ``sigma_read`` adds multiplicative per-MVM
+    read noise inside the vmapped solver (both are part of the executable
+    cache key).  Subclasses (``crossbar.solver.CrossbarBatchSolver``)
+    override ``_make_pipeline``/``_collect``/``_device_signature`` to run
+    full device physics in the same bucketed harness.
     """
 
     def __init__(self, opts: PDHGOptions = PDHGOptions(), *,
                  mesh=None, batch_axes: Tuple[str, ...] = ("data",),
-                 min_bucket: int = MIN_BUCKET):
+                 min_bucket: int = MIN_BUCKET,
+                 sigma_read: float = 0.0,
+                 tile: Optional[Tuple[int, int]] = None):
         self.opts = opts
         self.mesh = mesh
         self.batch_axes = tuple(batch_axes)
         self.min_bucket = min_bucket
+        self.sigma_read = float(sigma_read)
+        self.tile = None if tile is None else (int(tile[0]), int(tile[1]))
         self._cache = {}
         self.cache_hits = 0
         self.cache_misses = 0
+
+    # -- subclass hooks -----------------------------------------------
+
+    def _bucket(self, m: int, n: int) -> Tuple[int, int]:
+        return bucket_dims(m, n, min_size=self.min_bucket, tile=self.tile)
+
+    def _make_pipeline(self):
+        return make_bucket_pipeline(self.opts, self.sigma_read)
+
+    def _device_signature(self):
+        """Hashable device component of the executable cache key."""
+        return None
 
     # -- executable cache ---------------------------------------------
 
@@ -196,7 +251,9 @@ class BatchSolver:
         return NamedSharding(self.mesh, P(self.batch_axes))
 
     def _executable(self, mb: int, nb: int, B: int, dtype):
-        key = (mb, nb, B, jnp.dtype(dtype).name, opts_static(self.opts),
+        key = (mb, nb, B, jnp.dtype(dtype).name,
+               opts_static(self.opts, self.sigma_read), self.tile,
+               self._device_signature(),
                None if self.mesh is None else
                (tuple(self.mesh.axis_names),
                 tuple(self.mesh.devices.shape), self.batch_axes))
@@ -206,11 +263,13 @@ class BatchSolver:
             return hit
         self.cache_misses += 1
         sh = self._sharding()
-        sds = lambda *s: jax.ShapeDtypeStruct(  # noqa: E731
-            (B, *s), dtype, sharding=sh)
-        args = (sds(mb, nb), sds(mb), sds(nb), sds(nb), sds(nb))
-        compiled = jax.jit(make_bucket_pipeline(self.opts)).lower(
-            *args).compile()
+        sds = lambda s, dt: jax.ShapeDtypeStruct(  # noqa: E731
+            (B, *s), dt, sharding=sh)
+        k0 = jax.random.PRNGKey(0)
+        args = (sds((mb, nb), dtype), sds((mb,), dtype), sds((nb,), dtype),
+                sds((nb,), dtype), sds((nb,), dtype),
+                sds(k0.shape, k0.dtype))
+        compiled = jax.jit(self._make_pipeline()).lower(*args).compile()
         self._cache[key] = compiled
         return compiled
 
@@ -220,16 +279,42 @@ class BatchSolver:
 
     # -- solving ------------------------------------------------------
 
+    def _instance_keys(self, idxs: Sequence[int], n_total: int,
+                       B: int) -> jnp.ndarray:
+        """One PRNG key per batch slot: fold the instance's position in
+        the stream into ``opts.seed`` (filler slots get out-of-range
+        positions, so even dropped work is decorrelated)."""
+        base = jax.random.PRNGKey(self.opts.seed)
+        positions = list(idxs) + [n_total + j for j in range(B - len(idxs))]
+        return jax.vmap(lambda p: jax.random.fold_in(base, p))(
+            jnp.asarray(positions, jnp.uint32))
+
+    def _collect(self, out, bucket: Tuple[int, int], idxs: Sequence[int],
+                 lps: Sequence[StandardLP], results: list) -> None:
+        xs, ys, its, merits = out
+        xs, ys = np.asarray(xs), np.asarray(ys)
+        its, merits = np.asarray(its), np.asarray(merits)
+        for k, i in enumerate(idxs):
+            lp = lps[i]
+            m, n = lp.K.shape
+            x = xs[k, :n]
+            results[i] = BatchItemResult(
+                name=lp.name, x=x, y=ys[k, :m],
+                obj=float(lp.c @ x), iterations=int(its[k]),
+                merit=float(merits[k]),
+                converged=bool(merits[k] <= self.opts.tol),
+                bucket=bucket,
+            )
+
     def solve_stream(self, lps: Sequence[StandardLP]) -> List[BatchItemResult]:
         """Solve a heterogeneous stream; results come back in input order."""
         lps = list(lps)
         dtype = jnp.dtype(self.opts.dtype)
         buckets = {}
         for i, lp in enumerate(lps):
-            mb, nb = bucket_dims(*lp.K.shape, min_size=self.min_bucket)
-            buckets.setdefault((mb, nb), []).append(i)
+            buckets.setdefault(self._bucket(*lp.K.shape), []).append(i)
 
-        results: List[Optional[BatchItemResult]] = [None] * len(lps)
+        results: List[Optional[object]] = [None] * len(lps)
         for (mb, nb), idxs in buckets.items():
             group = [lps[i] for i in idxs]
             B = self._padded_batch(len(group))
@@ -237,23 +322,13 @@ class BatchSolver:
             filler = [group[0]] * (B - len(group))
             stacked = stack_problems(group + filler, m=mb, n=nb)
             arrays = [jnp.asarray(a, dtype) for a in stacked]
+            keys = self._instance_keys(idxs, len(lps), B)
             sh = self._sharding()
             if sh is not None:
                 arrays = [jax.device_put(a, sh) for a in arrays]
-            xs, ys, its, merits = self._executable(mb, nb, B, dtype)(*arrays)
-            xs, ys = np.asarray(xs), np.asarray(ys)
-            its, merits = np.asarray(its), np.asarray(merits)
-            for k, i in enumerate(idxs):
-                lp = lps[i]
-                m, n = lp.K.shape
-                x = xs[k, :n]
-                results[i] = BatchItemResult(
-                    name=lp.name, x=x, y=ys[k, :m],
-                    obj=float(lp.c @ x), iterations=int(its[k]),
-                    merit=float(merits[k]),
-                    converged=bool(merits[k] <= self.opts.tol),
-                    bucket=(mb, nb),
-                )
+                keys = jax.device_put(keys, sh)
+            out = self._executable(mb, nb, B, dtype)(*arrays, keys)
+            self._collect(out, (mb, nb), idxs, lps, results)
         return results  # type: ignore[return-value]
 
 

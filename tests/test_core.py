@@ -122,6 +122,71 @@ def test_pdhg_respects_bounds(x64):
     assert np.all(r.x <= 1.5 + 1e-9)
 
 
+def test_jit_seed_changes_trajectory(x64):
+    """Regression: _solve_jit_core used to hardcode PRNGKey(0) for the
+    iterate init, so ``opts.seed`` never reached the jitted start point."""
+    lp = random_standard_lp(8, 14, seed=3)
+    mk = lambda s: PDHGOptions(  # noqa: E731
+        max_iters=128, tol=1e-30, check_every=64, seed=s)
+    r0 = solve_jit(lp, mk(0))
+    r0b = solve_jit(lp, mk(0))
+    r1 = solve_jit(lp, mk(1))
+    np.testing.assert_allclose(r0.x, r0b.x)     # deterministic given seed
+    assert not np.allclose(r0.x, r1.x)          # seed reaches the init
+
+
+def test_host_residual_checks_use_fresh_noise_keys(x64):
+    """Regression: the restart check reused k3/k4 for the averaged-iterate
+    MVMs, correlating read noise between the current- and averaged-iterate
+    residual evaluations.  Every key an accelerator sees must be unique."""
+    from repro.core.symblock import Accel
+
+    lp = random_standard_lp(8, 14, seed=2)
+    seen = []
+
+    def factory(K):
+        base = encode_exact(K)
+
+        def mvm(v, key=None):
+            if key is not None:
+                seen.append(tuple(np.asarray(key).tolist()))
+            return base.mvm_full(v)
+
+        return Accel(mvm_full=mvm, m=base.m, n=base.n, name="crossbar:spy")
+
+    opts = PDHGOptions(max_iters=256, tol=1e-12, check_every=64)
+    solve(lp, opts, accel_factory=factory)
+    assert len(seen) > 8                        # lanczos + iters + checks
+    assert len(seen) == len(set(seen))
+
+
+def test_jit_mvm_accounting_includes_residual_checks(x64):
+    """Regression: solve_jit reported 2*it, dropping the Lanczos MVMs and
+    the 4 residual-check MVMs per check that the energy ledger charges."""
+    lp = random_standard_lp(8, 14, seed=0)
+    opts = PDHGOptions(max_iters=20000, tol=1e-6, check_every=64)
+    r = solve_jit(lp, opts)
+    assert r.status == "optimal"
+    n_checks = max(1, r.iterations // opts.check_every)
+    assert r.mvm_calls == (opts.lanczos_iters + 2 * r.iterations
+                           + 4 * n_checks)
+    assert r.mvm_calls > 2 * r.iterations
+
+
+def test_host_mvm_accounting_matches_jit_formula(x64):
+    """Host path (stats-counted) and jit path (analytic) agree on the
+    per-iteration accounting: 2 MVMs/iter + 4 per residual check (the
+    host skips the 2 averaged-iterate MVMs on the final, converging
+    check because it breaks first)."""
+    lp = random_standard_lp(8, 14, seed=1)
+    opts = PDHGOptions(max_iters=20000, tol=1e-6, check_every=64)
+    r = solve(lp, opts)
+    assert r.status == "optimal"
+    n_checks = r.iterations // opts.check_every  # converged at a check
+    expected = r.lanczos_iters + 2 * r.iterations + 4 * n_checks - 2
+    assert r.mvm_calls == expected
+
+
 def test_infeasibility_divergence_detected(x64):
     lp = infeasible_lp(8, 12, seed=7)
     r = solve_jit(lp, PDHGOptions(max_iters=4000, tol=1e-9))

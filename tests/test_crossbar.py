@@ -1,5 +1,6 @@
 """Device-simulation substrate tests (encode/write-verify/energy ledger)."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -53,6 +54,51 @@ def test_ledger_write_once_read_many():
     assert led.read_energy_j > 0
     # reads are much cheaper than the write (the paper's core premise)
     assert led.read_energy_j / led.mvm_count < write_e / 10
+
+
+def test_ledger_splits_logical_and_padding_write_energy():
+    """Tile padding programs RESET pulses on cells the operator never
+    uses; those must be ledgered apart from the logical cells."""
+    rng = np.random.default_rng(7)
+    W = rng.normal(size=(30, 40))                # tile-pads to 64x64
+    led = Ledger()
+    encode_matrix(W, EPIRAM, jax.random.PRNGKey(0), ledger=led)
+    assert led.cells_written == 2 * 64 * 64
+    assert led.cells_written_padding == 2 * (64 * 64 - 30 * 40)
+    # padding cells: exactly one RESET pulse per cell
+    expected_pad = led.cells_written_padding * EPIRAM.write_pulse_energy_j
+    np.testing.assert_allclose(led.write_energy_padding_j, expected_pad)
+    assert 0 < led.write_energy_padding_j < led.write_energy_j
+    np.testing.assert_allclose(
+        led.write_energy_logical_j,
+        led.write_energy_j - led.write_energy_padding_j)
+
+    # an exact-fit matrix has zero padding cost
+    led2 = Ledger()
+    encode_matrix(rng.normal(size=(64, 64)), EPIRAM,
+                  jax.random.PRNGKey(1), ledger=led2)
+    assert led2.cells_written_padding == 0
+    assert led2.write_energy_padding_j == 0.0
+    assert led2.write_energy_logical_j == led2.write_energy_j
+
+
+def test_encode_core_vmaps_over_a_stacked_operator_batch():
+    """The pure programming model batches: one call programs (B, R, C)."""
+    from repro.crossbar import encode_core
+
+    rng = np.random.default_rng(8)
+    Ws = jnp.asarray(rng.normal(size=(3, 64, 64)))
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    g_pos, g_neg, scales, nzs = jax.vmap(
+        lambda W, k: encode_core(W, k, EPIRAM.g_levels,
+                                 EPIRAM.sigma_program))(Ws, keys)
+    assert g_pos.shape == (3, 64, 64) and g_neg.shape == (3, 64, 64)
+    for i in range(3):
+        dec = np.asarray((g_pos[i] - g_neg[i]) * scales[i])
+        err = np.abs(dec - np.asarray(Ws[i])).max() \
+            / np.abs(np.asarray(Ws[i])).max()
+        assert err < 1.5 / EPIRAM.g_levels + 6 * EPIRAM.sigma_program
+        assert 0 < int(nzs[i]) <= 64 * 64
 
 
 def test_taox_writes_cheaper_than_epiram():

@@ -120,6 +120,18 @@ def test_bucket_dims_power_of_two():
     assert bucket_dims(129, 300) == (256, 512)
 
 
+def test_bucket_dims_device_tile_mode():
+    """Tile mode snaps to multiples of the physical crossbar dims."""
+    assert bucket_dims(8, 70, tile=(64, 64)) == (64, 128)
+    assert bucket_dims(64, 64, tile=(64, 64)) == (64, 64)
+    assert bucket_dims(65, 1, tile=(64, 32)) == (128, 32)
+    assert bucket_dims(1, 1, tile=(64, 64)) == (64, 64)
+    # device models feed their geometry straight in
+    from repro.crossbar import EPIRAM
+    tile = (EPIRAM.crossbar_rows, EPIRAM.crossbar_cols)
+    assert bucket_dims(20, 70, tile=tile) == (64, 128)
+
+
 def test_pad_problem_preserves_optimum(x64):
     lp = random_standard_lp(8, 14, seed=3)
     padded = pad_problem(lp, 16, 32)
@@ -183,15 +195,119 @@ def test_solve_stream_on_mesh(x64):
         assert abs(r.obj - lp.obj_opt) / abs(lp.obj_opt) < 1e-4
 
 
-def test_crossbar_stream_bucket_reuse(x64):
-    """Crossbar serving path: distinct shapes share a bucket trace and
-    keep their per-instance ledgers."""
-    from repro.crossbar import EPIRAM, solve_crossbar_stream
+def test_batch_instances_get_distinct_streams(x64):
+    """Regression: every instance in a bucket used to share PRNGKey(1),
+    giving identical inits and read-noise streams.  Two copies of the
+    SAME problem must now follow different trajectories."""
+    lp = random_standard_lp(8, 14, seed=4)
+    opts = PDHGOptions(max_iters=128, tol=1e-30, check_every=64)
+    solver = BatchSolver(opts, sigma_read=0.01)
+    r = solver.solve_stream([lp, lp])
+    assert not np.allclose(r[0].x, r[1].x)
+    assert r[0].merit != r[1].merit
 
+
+def test_batch_sigma_read_is_applied(x64):
+    """Regression: the batched path used to drop ``sigma_read`` on the
+    floor (always solving noiselessly)."""
+    lp = random_standard_lp(8, 14, seed=5)
+    opts = PDHGOptions(max_iters=256, tol=1e-30, check_every=64)
+    clean = BatchSolver(opts).solve_stream([lp])[0]
+    noisy = BatchSolver(opts, sigma_read=0.05).solve_stream([lp])[0]
+    assert not np.allclose(clean.x, noisy.x)
+
+
+def test_batch_seed_reaches_bucket_pipeline(x64):
+    """opts.seed drives the per-instance keys of the compiled pipeline."""
+    lp = random_standard_lp(8, 14, seed=6)
+    mk = lambda s: PDHGOptions(  # noqa: E731
+        max_iters=128, tol=1e-30, check_every=64, seed=s)
+    r0 = BatchSolver(mk(0)).solve_stream([lp])[0]
+    r0b = BatchSolver(mk(0)).solve_stream([lp])[0]
+    r1 = BatchSolver(mk(7)).solve_stream([lp])[0]
+    np.testing.assert_allclose(r0.x, r0b.x)
+    assert not np.allclose(r0.x, r1.x)
+
+
+# --------------------------------------------------- crossbar streaming ---
+
+CB_OPTS = PDHGOptions(max_iters=2000, tol=1e-3, check_every=64,
+                      lanczos_iters=16)
+
+
+def test_crossbar_stream_bucket_reuse_and_cache(x64):
+    """Device-tile-aware serving: distinct shapes share one tile bucket,
+    encode+solve compiles once per (bucket, batch, device) signature,
+    and per-instance ledgers survive."""
+    from repro.crossbar import EPIRAM, TAOX_HFOX, CrossbarBatchSolver
+
+    solver = CrossbarBatchSolver(CB_OPTS, device=EPIRAM)
     lps = [random_standard_lp(8, 14, seed=0), random_standard_lp(7, 12, seed=1)]
-    reports = solve_crossbar_stream(lps, OPTS, device=EPIRAM)
+    reports = solver.solve_stream(lps)
+    assert solver.cache_info() == {"hits": 0, "misses": 1, "entries": 1}
     for lp, rep in zip(lps, reports):
         assert rep.result.x.shape == (lp.K.shape[1],)
         rel = abs(rep.result.obj - lp.obj_opt) / abs(lp.obj_opt)
         assert rel < 5e-2      # device physics (quantization + read noise)
         assert rep.ledger.write_energy_j > 0
+        assert rep.ledger.write_energy_padding_j > 0   # 64x64 tile, small LP
+        assert rep.ledger.mvm_count == rep.lanczos_mvms + rep.pdhg_mvms
+
+    # same tile bucket + batch size, new instances -> compiled reuse
+    solver.solve_stream([random_standard_lp(9, 13, seed=2),
+                         random_standard_lp(6, 10, seed=3)])
+    assert solver.cache_info() == {"hits": 1, "misses": 1, "entries": 1}
+
+    # the executable cache key carries the device model
+    other = CrossbarBatchSolver(CB_OPTS, device=TAOX_HFOX)
+    other.solve_stream([random_standard_lp(8, 14, seed=0),
+                        random_standard_lp(7, 12, seed=1)])
+    assert other.cache_misses == 1
+    assert set(other._cache).isdisjoint(set(solver._cache))
+
+
+def test_crossbar_stream_rectangular_tiles_ledger_whole_tiles(x64):
+    """With non-square tiles the symmetric block M lands mid-tile in one
+    dimension; the ledger must still account whole physical tiles."""
+    import dataclasses as dc
+
+    from repro.crossbar import EPIRAM, CrossbarBatchSolver
+
+    dev = dc.replace(EPIRAM, name="rect", crossbar_rows=32, crossbar_cols=16)
+    opts = PDHGOptions(max_iters=128, tol=1.0, check_every=64,
+                       lanczos_iters=4)
+    lp = random_standard_lp(8, 14, seed=0)      # bucket (32, 16), M is 48x48
+    rep = CrossbarBatchSolver(opts, device=dev).solve_stream([lp])[0]
+    # M tile-pads to (64, 48): rows to 2x32, cols already 3x16
+    assert rep.ledger.cells_written == 2 * 64 * 48
+    assert rep.ledger.cells_written_padding == 2 * (64 * 48 - (8 + 14) ** 2)
+
+
+def test_crossbar_stream_matches_per_instance_jit(x64):
+    """Batched encode->solve agrees with the single-instance crossbar
+    path on a mixed-shape stream (both sit at the device noise floor)."""
+    from repro.crossbar import TAOX_HFOX, solve_crossbar_jit, \
+        solve_crossbar_stream
+
+    lps = [
+        random_standard_lp(8, 14, seed=0),
+        random_standard_lp(10, 18, seed=3),
+        random_standard_lp(16, 28, seed=4),
+        random_standard_lp(20, 70, seed=2),     # second tile bucket
+    ]
+    opts = PDHGOptions(max_iters=8000, tol=1e-4, check_every=64,
+                       lanczos_iters=32)
+    reports = solve_crossbar_stream(lps, opts, device=TAOX_HFOX)
+    tile = (TAOX_HFOX.crossbar_rows, TAOX_HFOX.crossbar_cols)
+    for lp, rep in zip(lps, reports):
+        single = solve_crossbar_jit(
+            pad_problem(lp, *bucket_dims(*lp.K.shape, tile=tile)),
+            opts, device=TAOX_HFOX)
+        assert rep.result.x.shape == (lp.K.shape[1],)
+        rel_b = abs(rep.result.obj - lp.obj_opt) / abs(lp.obj_opt)
+        rel_s = abs(single.result.obj - lp.obj_opt) / abs(lp.obj_opt)
+        assert rel_b < 5e-2, (lp.name, rel_b)
+        assert rel_s < 5e-2, (lp.name, rel_s)
+        agree = abs(rep.result.obj - single.result.obj) \
+            / max(abs(single.result.obj), 1e-12)
+        assert agree < 1e-1, (lp.name, agree)

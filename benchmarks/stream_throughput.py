@@ -14,9 +14,14 @@ the comparison isolates batching, not compilation.
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke
   PYTHONPATH=src python benchmarks/stream_throughput.py \
       --instances 32 --device taox --out experiments/stream_throughput.json
+  PYTHONPATH=src python benchmarks/stream_throughput.py --kernel pallas
 
 Each timed path runs twice: COLD includes compilation, WARM is the
 steady-state serving cost (the number that matters for throughput).
+``--kernel`` selects the engine's update backend (jnp vs fused Pallas).
+Besides the full record, every run emits ``BENCH_stream.json`` at the
+repo root (schema ``bench_stream/v1``: per-path warm/cold seconds +
+device-MVM totals) as the perf baseline for future PRs; CI uploads it.
 """
 from __future__ import annotations
 
@@ -57,16 +62,16 @@ def bench_exact(lps, opts):
     from repro.runtime.batch import bucket_dims, pad_problem
 
     def per_instance():
-        objs = []
+        results = []
         for lp in lps:
             padded = pad_problem(lp, *bucket_dims(*lp.K.shape))
-            objs.append(solve_jit(padded, opts).obj)
-        return objs
+            results.append(solve_jit(padded, opts))
+        return results
 
     timings = {}
-    t0 = time.time(); objs_loop = per_instance()
+    t0 = time.time(); loop_results = per_instance()
     timings["per_instance_cold_s"] = time.time() - t0
-    t0 = time.time(); per_instance()
+    t0 = time.time(); loop_results = per_instance()
     timings["per_instance_warm_s"] = time.time() - t0
 
     solver = BatchSolver(opts)
@@ -85,8 +90,11 @@ def bench_exact(lps, opts):
         "buckets": sorted({str(r.bucket) for r in results}),
         "max_rel_gap": float(max(gaps)),
         "max_rel_disagreement_vs_loop": float(max(
-            abs(r.obj - o) / max(abs(o), 1e-12)
-            for r, o in zip(results, objs_loop))),
+            abs(r.obj - lr.obj) / max(abs(lr.obj), 1e-12)
+            for r, lr in zip(results, loop_results))),
+        "mvm_total_batched": int(sum(r.mvm_calls for r in results)),
+        "mvm_total_per_instance": int(sum(r.mvm_calls
+                                          for r in loop_results)),
     }
 
 
@@ -134,6 +142,10 @@ def bench_device(lps, opts, device):
         "max_rel_gap": float(max(gaps)),
         "ledger_batched": _sum_ledgers(reports),
         "ledger_per_instance": _sum_ledgers(loop_reports),
+        "mvm_total_batched": int(sum(rep.result.mvm_calls
+                                     for rep in reports)),
+        "mvm_total_per_instance": int(sum(rep.result.mvm_calls
+                                          for rep in loop_reports)),
     }
 
 
@@ -145,6 +157,10 @@ def main(argv=None):
                     help="stream length (default: 16 smoke / 32 full)")
     ap.add_argument("--device", default="epiram",
                     choices=["epiram", "taox"])
+    ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
+                    help="engine update backend (pallas = fused kernels; "
+                         "on the crossbar path also the differential-pair "
+                         "MVM kernel)")
     ap.add_argument("--max-iters", type=int, default=None)
     ap.add_argument("--tol", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -168,7 +184,7 @@ def main(argv=None):
     device = DEVICES["EpiRAM" if args.device == "epiram" else "TaOx-HfOx"]
     opts = PDHGOptions(max_iters=max_iters, tol=tol, check_every=64,
                        lanczos_iters=16 if args.smoke else 48,
-                       seed=args.seed)
+                       seed=args.seed, kernel=args.kernel)
 
     lps = build_stream(n, shapes, seed=args.seed)
     record = {
@@ -176,6 +192,7 @@ def main(argv=None):
             "n_instances": n, "shapes": [list(s) for s in shapes],
             "max_iters": max_iters, "tol": tol, "device": device.name,
             "tile": [device.crossbar_rows, device.crossbar_cols],
+            "kernel": args.kernel,
             "smoke": bool(args.smoke), "seed": args.seed,
             "jax": jax.__version__,
         },
@@ -191,6 +208,28 @@ def main(argv=None):
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
 
+    # Compact perf-baseline record for future PRs: per-path warm/cold
+    # seconds + device-MVM totals, written at the repo root so CI can
+    # upload it as a stable-named artifact next to the full record.
+    bench = {
+        "schema": "bench_stream/v1",
+        "kernel": args.kernel,
+        "config": record["config"],
+        "paths": {
+            f"{path}_{variant}": {
+                "cold_s": record[path][f"{variant}_cold_s"],
+                "warm_s": record[path][f"{variant}_warm_s"],
+                "mvm_total": record[path][f"mvm_total_{variant}"],
+            }
+            for path in ("exact", "crossbar")
+            for variant in ("batched", "per_instance")
+        },
+    }
+    bench_out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_stream.json")
+    with open(bench_out, "w") as f:
+        json.dump(bench, f, indent=1)
+
     for path in ("exact", "crossbar"):
         r = record[path]
         print(f"[{path}] per-instance warm {r['per_instance_warm_s']:.3f}s"
@@ -202,7 +241,7 @@ def main(argv=None):
     print(f"[crossbar] stream write={led['write_energy_j']:.3f}J "
           f"(padding {led['write_energy_padding_j']:.3f}J) "
           f"read={led['read_energy_j']:.3f}J mvms={led['mvm_count']:.0f}")
-    print(f"wrote {out}")
+    print(f"wrote {out} and {bench_out}")
     return record
 
 

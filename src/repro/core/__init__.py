@@ -1,4 +1,19 @@
 # The paper's primary contribution: distributed in-memory PDHG for LPs.
+from . import engine
+from .engine import (
+    JNP_UPDATES,
+    Operator,
+    PDHGState,
+    Updates,
+    accel_operator,
+    crossbar_operator,
+    dense_operator,
+    make_updates,
+    mvm_accounting,
+    pdhg_loop,
+    pdhg_step,
+    sharded_operator,
+)
 from .symblock import (
     MODE_AX,
     MODE_ATY,
@@ -32,6 +47,9 @@ from .pdhg import PDHGOptions, PDHGResult, prepare, solve, solve_jit
 from .infeasibility import Certificate, check_farkas, difference_ray
 
 __all__ = [
+    "engine", "JNP_UPDATES", "Operator", "PDHGState", "Updates",
+    "accel_operator", "crossbar_operator", "dense_operator", "make_updates",
+    "mvm_accounting", "pdhg_loop", "pdhg_step", "sharded_operator",
     "MODE_AX", "MODE_ATY", "MODE_FULL", "Accel", "as_dense",
     "build_sym_block", "encode_exact", "encode_noisy", "matmul_accel",
     "scaled_accel", "LanczosResult", "lanczos_svd", "lanczos_svd_jit",

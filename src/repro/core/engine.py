@@ -1,0 +1,401 @@
+"""One PDHG iteration engine with pluggable operator / update backends.
+
+The paper's core claim is that an enhanced-PDHG iteration reduces to two
+device MVMs plus cheap vector algebra.  This module is the SINGLE home of
+that half-iteration — extrapolation, dual MVM+update, primal MVM+update,
+and the check-interval residual/restart block — shared verbatim by every
+solver path in the repo:
+
+    core.pdhg.solve        host loop      accel_operator   (Accel handles)
+    core.pdhg.solve_jit    while_loop     dense_operator
+    runtime.batch          vmapped        dense_operator
+    crossbar.solver        vmapped        dense_operator | crossbar_operator
+    distributed.pdhg_dist  shard_map      sharded_operator
+
+Two orthogonal backend axes parameterize the engine:
+
+  * **operator backend** (``Operator``): where the two device MVMs run —
+    dense ``jnp`` matmuls with optional multiplicative read noise, the
+    differential-pair Pallas crossbar kernel (``kernels.ops.crossbar_mvm``
+    against the single programmed symmetric block M), a shard_map
+    psum-tiled operator over a device mesh, or a host-side ``Accel``
+    handle (crossbar simulation with an energy ledger).
+  * **update backend** (``Updates``): how the proximal vector algebra
+    runs — reference ``jnp`` (one expression per update) or the fused
+    Pallas kernels (``kernels.ops.primal_update`` / ``dual_update``, one
+    VMEM pass per vector), selected by ``PDHGOptions.kernel`` with
+    interpret-mode auto-detection from ``kernels.ops._interpret_default``.
+
+Iteration state is carried in the *pre-extrapolated* form: ``x_bar`` for
+iteration k is computed at the END of iteration k-1 (fused into the
+primal update — exactly what the Pallas kernel emits), and ``tau/sigma``
+already include iteration k's deterministic-adaptation factor theta_k.
+This is algebraically identical to Algorithm 4's ordering: theta_{k}
+depends only on tau_{k-1}, which is known when iteration k-1 retires.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .residuals import kkt_residuals
+from .symblock import MODE_AX, MODE_ATY, matmul_accel
+
+KERNELS = ("jnp", "pallas")
+
+
+# ---------------------------------------------------------------- state ---
+
+class PDHGState(NamedTuple):
+    """Carried PDHG iterate (a pytree; safe in lax loops and shard_map).
+
+    ``tau``/``sigma`` are the CURRENT iteration's step sizes (theta_k
+    already applied); ``x_bar`` is the current iteration's extrapolated
+    point; ``x_prev`` feeds the r_iter residual at check time.
+    """
+
+    x: jax.Array
+    x_prev: jax.Array
+    x_bar: jax.Array
+    y: jax.Array
+    tau: jax.Array
+    sigma: jax.Array
+
+
+class Operator(NamedTuple):
+    """The two device MVMs of one iteration.  ``fwd(v, key) ~ K v`` (dual
+    step), ``adj(v, key) ~ K^T v`` (primal step); ``key`` seeds per-MVM
+    read noise and may be ``None`` on noiseless backends."""
+
+    fwd: Callable
+    adj: Callable
+    name: str = "dense"
+
+
+class Updates(NamedTuple):
+    """The proximal vector algebra of one iteration.
+
+    primal(x, kty, c, T, lb, ub, tau, theta) -> (x_new, x_bar_next)
+    dual(y, kxbar, b, Sigma, sigma)          -> y_new
+    """
+
+    primal: Callable
+    dual: Callable
+    name: str = "jnp"
+
+
+# ---------------------------------------------------- operator backends ---
+
+def _read_noise(w, key, sigma_read):
+    """Multiplicative cycle-to-cycle read noise, truncated at 4 sigma so
+    Assumption 3 (bounded perturbation) holds exactly."""
+    g = jnp.clip(jax.random.normal(key, w.shape, w.dtype), -4.0, 4.0)
+    return w * (1.0 + sigma_read * g)
+
+
+def dense_operator(K_fwd, K_adj, sigma_read: float = 0.0) -> Operator:
+    """Dense jnp backend.  On an ideal device ``K_adj == K_fwd.T``; on a
+    programmed crossbar the two blocks of M are physically distinct cells
+    and carry independent programming error."""
+
+    def fwd(v, key=None):
+        w = K_fwd @ v
+        if sigma_read > 0.0:
+            w = _read_noise(w, key, sigma_read)
+        return w
+
+    def adj(v, key=None):
+        w = K_adj @ v
+        if sigma_read > 0.0:
+            w = _read_noise(w, key, sigma_read)
+        return w
+
+    return Operator(fwd, adj, "dense")
+
+
+def accel_operator(accel) -> Operator:
+    """Host-loop backend over an encoded ``symblock.Accel`` handle (MVM
+    stats feed the energy ledger; the backend brings its own physics)."""
+
+    def fwd(v, key=None):
+        return matmul_accel(accel, v, MODE_AX, key=key)
+
+    def adj(v, key=None):
+        return matmul_accel(accel, v, MODE_ATY, key=key)
+
+    return Operator(fwd, adj, f"accel({accel.name})")
+
+
+def crossbar_operator(g_pos, g_neg, scale, m: int, n: int,
+                      sigma_read: float = 0.0, interpret=None) -> Operator:
+    """Differential-pair Pallas backend against the SINGLE programmed
+    symmetric block M (Algorithm 2): both MVM modes are zero-padded reads
+    of the same (R, C) conductance array, exactly the paper's access
+    pattern.  Read noise is a per-row multiplicative sample folded into
+    the kernel's output gain."""
+    from ..kernels import ops  # deferred: keep core import-light
+
+    R, C = g_pos.shape
+
+    def _mvm(v_full, key):
+        if sigma_read > 0.0:
+            noise = sigma_read * jnp.clip(
+                jax.random.normal(key, (R,), v_full.dtype), -4.0, 4.0)
+        else:
+            noise = jnp.zeros((R,), v_full.dtype)
+        return ops.crossbar_mvm(g_pos, g_neg, v_full, scale, noise,
+                                interpret=interpret)
+
+    def fwd(x, key=None):
+        v = jnp.zeros((C,), x.dtype).at[m:m + n].set(x)
+        return _mvm(v, key)[:m]
+
+    def adj(y, key=None):
+        v = jnp.zeros((C,), y.dtype).at[:m].set(y)
+        return _mvm(v, key)[m:m + n]
+
+    return Operator(fwd, adj, "crossbar")
+
+
+def sharded_operator(K_loc, row_axis, col_axis) -> Operator:
+    """shard_map psum-tiled backend: each device owns a static (m_loc,
+    n_loc) tile of K; ``fwd`` psums partial products over the column
+    axis ("sum the currents along a crossbar grid row"), ``adj`` over the
+    row axes.  Tiles may be a narrower dtype than the vectors (bf16
+    "conductances"); accumulation is at least f32 and never *below* the
+    tile dtype (f64 tiles accumulate in f64)."""
+    acc_dt = jnp.promote_types(K_loc.dtype, jnp.float32)
+
+    def fwd(v, key=None):
+        w = jax.lax.dot_general(
+            K_loc, v.astype(K_loc.dtype),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dt,
+        )
+        return jax.lax.psum(w.astype(v.dtype), col_axis)
+
+    def adj(v, key=None):
+        w = jax.lax.dot_general(
+            K_loc, v.astype(K_loc.dtype),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=acc_dt,
+        )
+        return jax.lax.psum(w.astype(v.dtype), row_axis)
+
+    return Operator(fwd, adj, "sharded")
+
+
+# ------------------------------------------------------ update backends ---
+
+def _primal_jnp(x, kty, c, T, lb, ub, tau, theta):
+    x_new = jnp.clip(x - tau * T * (c - kty), lb, ub)
+    return x_new, x_new + theta * (x_new - x)
+
+
+def _dual_jnp(y, kxbar, b, Sigma, sigma):
+    return y + sigma * Sigma * (b - kxbar)
+
+
+JNP_UPDATES = Updates(_primal_jnp, _dual_jnp, "jnp")
+
+
+def make_updates(kernel: str = "jnp", interpret=None) -> Updates:
+    """Update-backend factory keyed by ``PDHGOptions.kernel``.
+
+    ``interpret=None`` auto-detects per ``kernels.ops._interpret_default``
+    (interpreted on CPU, compiled Mosaic on real TPU)."""
+    if kernel == "jnp":
+        return JNP_UPDATES
+    if kernel == "pallas":
+        from ..kernels import ops  # deferred: keep core import-light
+
+        def primal(x, kty, c, T, lb, ub, tau, theta):
+            return ops.primal_update(x, kty, c, T, lb, ub, tau, theta,
+                                     interpret=interpret)
+
+        def dual(y, kxbar, b, Sigma, sigma):
+            return ops.dual_update(y, kxbar, b, Sigma, sigma,
+                                   interpret=interpret)
+
+        return Updates(primal, dual, "pallas")
+    raise ValueError(f"unknown update kernel {kernel!r}; expected "
+                     f"{KERNELS}")
+
+
+# ------------------------------------------------------------ iteration ---
+
+def init_state(x0, y0, tau0, sigma0, gamma) -> PDHGState:
+    """Enter engine state: apply iteration 1's theta to (tau0, sigma0)
+    and seed the extrapolation at x_bar_1 = x0 (x_prev = x0)."""
+    tau0 = jnp.asarray(tau0, x0.dtype)
+    sigma0 = jnp.asarray(sigma0, x0.dtype)
+    theta1 = 1.0 / jnp.sqrt(1.0 + 2.0 * gamma * tau0)
+    return PDHGState(x=x0, x_prev=x0, x_bar=x0, y=y0,
+                     tau=theta1 * tau0, sigma=sigma0 / theta1)
+
+
+def pdhg_step(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma, gamma,
+              state: PDHGState, k1=None, k2=None) -> PDHGState:
+    """ONE enhanced-PDHG iteration (paper Algorithm 4, eq. 7 signs).
+
+        y_{k+1} = y_k + sigma_k Sigma (b - K x_bar_k)        # device MVM 1
+        x_{k+1} = proj(x_k - tau_k T (c - K^T y_{k+1}))      # device MVM 2
+        theta_{k+1} = 1/sqrt(1 + 2 gamma tau_k)
+        x_bar_{k+1} = x_{k+1} + theta_{k+1} (x_{k+1} - x_k)  # fused above
+        tau_{k+1} = theta_{k+1} tau_k; sigma_{k+1} = sigma_k / theta_{k+1}
+
+    ``k1``/``k2`` seed the two MVMs' read noise (``None`` on noiseless
+    backends).  All step math lives HERE — no caller re-implements it.
+    """
+    Kxbar = op.fwd(state.x_bar, k1)
+    y_n = upd.dual(state.y, Kxbar, b, Sigma, state.sigma)
+    KTy = op.adj(y_n, k2)
+    theta_n = 1.0 / jnp.sqrt(1.0 + 2.0 * gamma * state.tau)
+    x_n, x_bar_n = upd.primal(state.x, KTy, c, T, lb, ub, state.tau, theta_n)
+    return PDHGState(x=x_n, x_prev=state.x, x_bar=x_bar_n, y=y_n,
+                     tau=theta_n * state.tau, sigma=state.sigma / theta_n)
+
+
+def restart_state(state: PDHGState, x_new, y_new) -> PDHGState:
+    """Adopt a restart point: x = x_prev = x_bar = x_new (momentum reset),
+    keeping the tau/sigma schedule running."""
+    return state._replace(x=x_new, x_prev=x_new, x_bar=x_new, y=y_new)
+
+
+# ----------------------------------------------------------------- loop ---
+
+def draw_init(key, m: int, n: int, lb, ub, dtype):
+    """Paper's projected-Gaussian start; returns (key', x0, y0).  Every
+    jitted path draws through here so backends share inits bit-for-bit."""
+    key, kx, ky = jax.random.split(key, 3)
+    x0 = jnp.clip(jax.random.normal(kx, (n,), dtype), lb, ub)
+    y0 = jax.random.normal(ky, (m,), dtype)
+    return key, x0, y0
+
+
+def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
+              x0, y0, tau0, sigma0, key, *,
+              max_iters: int, tol: float, gamma: float, check_every: int,
+              restart_beta: float, residual_fn: Optional[Callable] = None):
+    """The jitted solve loop every non-host path runs: ``check_every``
+    fused iterations per ``lax.while_loop`` body, then one residual check
+    on the current AND ergodic-average iterates with a PDLP-style
+    adaptive restart.
+
+    Check MVMs go through the SAME (possibly noisy) operator backend as
+    the solve — 4 device MVMs per check with fresh keys (k3/k4 current,
+    k5/k6 averaged; reusing them would correlate read noise between the
+    two residual evaluations), matching the host driver and the energy
+    ledger's 4-MVMs-per-check charge.
+
+    ``residual_fn(x, x_prev, y, Kx, KTy) -> scalar merit`` defaults to
+    the dense KKT residual max; the distributed path passes its
+    psum-reduced variant.  Returns ``(x, y, iterations, merit)``.
+    """
+    if residual_fn is None:
+        def residual_fn(x, x_prev, y, Kx, KTy):
+            return kkt_residuals(x, x_prev, y, c, b, Kx, KTy,
+                                 lb=lb, ub=ub).max
+
+    dt = x0.dtype
+    state0 = init_state(x0, y0, tau0, sigma0, gamma)
+
+    def half_iter(_, carry):
+        state, xs, ys, cnt, rk = carry
+        rk, k1, k2 = jax.random.split(rk, 3)
+        state = pdhg_step(op, upd, b, c, lb, ub, T, Sigma, gamma,
+                          state, k1, k2)
+        return (state, xs + state.x, ys + state.y, cnt + 1.0, rk)
+
+    def body(loop):
+        state, it, merit, xs, ys, cnt, m_restart, rk = loop
+        state, xs, ys, cnt, rk = jax.lax.fori_loop(
+            0, check_every, half_iter, (state, xs, ys, cnt, rk))
+        rk, k3, k4 = jax.random.split(rk, 3)
+        merit = residual_fn(state.x, state.x_prev, state.y,
+                            op.fwd(state.x, k3), op.adj(state.y, k4))
+        x_avg = xs / jnp.maximum(cnt, 1.0)
+        y_avg = ys / jnp.maximum(cnt, 1.0)
+        rk, k5, k6 = jax.random.split(rk, 3)
+        merit_avg = residual_fn(x_avg, x_avg, y_avg,
+                                op.fwd(x_avg, k5), op.adj(y_avg, k6))
+        do_restart = merit_avg < restart_beta * m_restart
+        use_avg = jnp.logical_or(
+            jnp.logical_and(do_restart, merit_avg < merit),
+            merit_avg <= tol,  # adopt the average if it already satisfies tol
+        )
+        pick = lambda a, cur: jnp.where(use_avg, a, cur)  # noqa: E731
+        state = state._replace(
+            x=pick(x_avg, state.x), x_prev=pick(x_avg, state.x_prev),
+            x_bar=pick(x_avg, state.x_bar), y=pick(y_avg, state.y))
+        m_restart = jnp.where(do_restart, jnp.minimum(merit_avg, merit),
+                              m_restart)
+        xs = jnp.where(do_restart, jnp.zeros_like(xs), xs)
+        ys = jnp.where(do_restart, jnp.zeros_like(ys), ys)
+        cnt = jnp.where(do_restart, 0.0, cnt)
+        merit = jnp.minimum(merit, merit_avg)
+        return (state, it + check_every, merit, xs, ys, cnt, m_restart, rk)
+
+    def cond(loop):
+        it, merit = loop[1], loop[2]
+        return jnp.logical_and(it < max_iters, merit > tol)
+
+    init = (state0, jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dt),
+            jnp.zeros_like(x0), jnp.zeros_like(y0), jnp.asarray(0.0, dt),
+            jnp.asarray(jnp.inf, dt), key)
+    state, it, merit = jax.lax.while_loop(cond, body, init)[:3]
+    return state.x, state.y, it, merit
+
+
+# ----------------------------------------------------- jit core + ledger ---
+
+def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
+               operator: Optional[Operator] = None):
+    """The jitted solve core (formerly ``pdhg._solve_jit_core``).
+
+    ``static`` is the hashable tuple from ``pdhg.opts_static``:
+    (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
+    sigma_read, kernel).  ``sigma_read`` > 0 adds multiplicative
+    cycle-to-cycle read noise per MVM — residual checks included —
+    and ``kernel`` selects the update backend (jnp | pallas).
+
+    ``operator`` swaps the MVM backend (e.g. the differential-pair
+    crossbar kernel) in place of the default dense one; the step-size
+    initialization, init draws, and option plumbing stay HERE either way.
+    """
+    (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
+     sigma_read, kernel) = static
+    m, n = K_fwd.shape
+    tau0 = eta / (omega * rho)
+    sigma0 = eta * omega / rho
+    key, x0, y0 = draw_init(key, m, n, lb, ub, K_fwd.dtype)
+    if operator is None:
+        operator = dense_operator(K_fwd, K_adj, sigma_read)
+    return pdhg_loop(
+        operator, make_updates(kernel),
+        b, c, lb, ub, T, Sigma, x0, y0, tau0, sigma0, key,
+        max_iters=max_iters, tol=tol, gamma=gamma, check_every=check_every,
+        restart_beta=restart_beta,
+    )
+
+
+def lemma2_margin(rho, sigma_read: float):
+    """Widen a NOISY operator-norm estimate so the step-size coupling
+    tau*sigma*rho^2 < 1 (Lemma 2) holds for the TRUE norm despite the
+    read noise in the Lanczos MVMs.  Identity when noiseless; callers
+    skip it entirely under ``opts.norm_override`` (a trusted norm)."""
+    if sigma_read <= 0.0:
+        return rho
+    return rho / (1.0 - min(4.0 * sigma_read, 0.5))
+
+
+def mvm_accounting(iterations: int, check_every: int,
+                   lanczos_iters: int) -> int:
+    """Device-MVM total for the energy ledger, shared by every jitted
+    path: Lanczos (1 MVM/iter; 0 under ``norm_override``) + PDHG (2/iter)
+    + residual checks (4 per check: x/y pair for the current AND the
+    averaged iterate — the jitted body always evaluates both)."""
+    n_checks = max(1, iterations // max(1, check_every))
+    return lanczos_iters + 2 * iterations + 4 * n_checks

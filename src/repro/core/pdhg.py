@@ -32,18 +32,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..lp.problem import StandardLP
+from . import engine
 from . import precondition as precond_mod
 from .lanczos import lanczos_svd, lanczos_svd_jit
 from .noise import NOISELESS, NoiseModel
 from .residuals import KKTResiduals, kkt_residuals
 from .symblock import (
-    MODE_AX,
-    MODE_ATY,
-    Accel,
     build_sym_block,
     encode_exact,
     encode_noisy,
-    matmul_accel,
     scaled_accel,
 )
 
@@ -67,6 +64,7 @@ class PDHGOptions:
     dtype: np.dtype = np.float64
     track_history: bool = False
     norm_override: Optional[float] = None  # skip Lanczos (reuse across runs)
+    kernel: str = "jnp"            # update backend: "jnp" | "pallas" (fused)
 
 
 @dataclasses.dataclass
@@ -83,6 +81,10 @@ class PDHGResult:
     history: Optional[list] = None
     restarts: int = 0
     certificate: Optional[object] = None   # Farkas cert when diverged
+    merit: Optional[float] = None  # in-loop merit at exit (jitted paths:
+    #                                computed with the same noisy device
+    #                                MVMs the solve used; ``residuals`` is
+    #                                the noiseless post-hoc evaluation)
 
 
 def _project(x, lb, ub):
@@ -159,7 +161,6 @@ def solve(
     x = _project(jax.random.normal(kx, (n,), dtype=scaled.K.dtype),
                  scaled.lb, scaled.ub)
     y = jax.random.normal(ky, (m,), dtype=scaled.K.dtype)
-    x_prev = x
     # running ergodic sums for restarts / averaged iterate
     x_sum = jnp.zeros_like(x)
     y_sum = jnp.zeros_like(y)
@@ -172,24 +173,24 @@ def solve(
     res = None
     it = 0
 
-    for it in range(opts.max_iters):
-        theta_k = 1.0 / np.sqrt(1.0 + 2.0 * opts.gamma * tau)
-        tau = theta_k * tau
-        sigma = sigma / theta_k
-        x_bar = x + theta_k * (x - x_prev)
+    # The per-iteration math is the engine's — this driver only owns the
+    # Python-level control flow (history, callbacks, infeasibility exit).
+    op = engine.accel_operator(accel)
+    upd = engine.make_updates(opts.kernel)
+    state = engine.init_state(x, y, tau, sigma, opts.gamma)
+    del x, y, tau, sigma
 
+    for it in range(opts.max_iters):
         if use_keys:
             key, k1, k2 = jax.random.split(key, 3)
         else:
             k1 = k2 = None
-        Kxbar = matmul_accel(accel, x_bar, MODE_AX, key=k1)
-        y = y + sigma * Sigma * (scaled.b - Kxbar)
-        x_prev = x
-        KTy = matmul_accel(accel, y, MODE_ATY, key=k2)
-        x = _project(x - tau * T * (scaled.c - KTy), scaled.lb, scaled.ub)
+        state = engine.pdhg_step(op, upd, scaled.b, scaled.c, scaled.lb,
+                                 scaled.ub, T, Sigma, opts.gamma, state,
+                                 k1, k2)
 
-        x_sum = x_sum + x
-        y_sum = y_sum + y
+        x_sum = x_sum + state.x
+        y_sum = y_sum + state.y
         avg_len += 1
 
         if (it + 1) % opts.check_every == 0 or it == opts.max_iters - 1:
@@ -197,17 +198,17 @@ def solve(
                 key, k3, k4 = jax.random.split(key, 3)
             else:
                 k3 = k4 = None
-            Kx = matmul_accel(accel, x, MODE_AX, key=k3)
-            KTy_c = matmul_accel(accel, y, MODE_ATY, key=k4)
+            Kx = op.fwd(state.x, k3)
+            KTy_c = op.adj(state.y, k4)
             res = kkt_residuals(
-                x, x_prev, y, scaled.c, scaled.b, Kx, KTy_c,
-                lb=scaled.lb, ub=scaled.ub,
+                state.x, state.x_prev, state.y, scaled.c, scaled.b, Kx,
+                KTy_c, lb=scaled.lb, ub=scaled.ub,
             )
             merit = float(res.max)
             if history is not None:
                 history.append(
                     {"iter": it + 1, "merit": merit, **res.as_dict(),
-                     "obj": float(jnp.vdot(scaled.c, x))}
+                     "obj": float(jnp.vdot(scaled.c, state.x))}
                 )
             if on_iteration is not None:
                 on_iteration(it + 1, merit, accel)
@@ -226,8 +227,8 @@ def solve(
                     k5 = k6 = None
                 x_avg = x_sum / avg_len
                 y_avg = y_sum / avg_len
-                Kxa = matmul_accel(accel, x_avg, MODE_AX, key=k5)
-                KTya = matmul_accel(accel, y_avg, MODE_ATY, key=k6)
+                Kxa = op.fwd(x_avg, k5)
+                KTya = op.adj(y_avg, k6)
                 res_avg = kkt_residuals(
                     x_avg, x_avg, y_avg, scaled.c, scaled.b, Kxa, KTya,
                     lb=scaled.lb, ub=scaled.ub,
@@ -236,22 +237,20 @@ def solve(
                 if merit_avg < opts.restart_beta * merit_at_restart:
                     # restart from the (better) averaged iterate
                     if merit_avg < merit:
-                        x = x_avg
-                        y = y_avg
-                        x_prev = x
+                        state = engine.restart_state(state, x_avg, y_avg)
                     merit_at_restart = min(merit_avg, merit)
-                    x_sum = jnp.zeros_like(x)
-                    y_sum = jnp.zeros_like(y)
+                    x_sum = jnp.zeros_like(state.x)
+                    y_sum = jnp.zeros_like(state.y)
                     avg_len = 0
                     n_restarts += 1
 
-    x_orig = np.asarray(scaled.unscale_x(x))
-    y_orig = np.asarray(scaled.unscale_y(y))
+    x_orig = np.asarray(scaled.unscale_x(state.x))
+    y_orig = np.asarray(scaled.unscale_y(state.y))
     if res is None:
-        Kx = matmul_accel(accel, x, MODE_AX)
-        KTy_c = matmul_accel(accel, y, MODE_ATY)
-        res = kkt_residuals(x, x, y, scaled.c, scaled.b, Kx, KTy_c,
-                            lb=scaled.lb, ub=scaled.ub)
+        Kx = op.fwd(state.x)
+        KTy_c = op.adj(state.y)
+        res = kkt_residuals(state.x, state.x, state.y, scaled.c, scaled.b,
+                            Kx, KTy_c, lb=scaled.lb, ub=scaled.ub)
     certificate = None
     if status == "diverged" and opts.infeasibility_detection:
         # PDHG's dual iterate diverges along a Farkas ray on primal-
@@ -277,114 +276,32 @@ def solve(
         history=history,
         restarts=n_restarts,
         certificate=certificate,
+        merit=float(res.max),
     )
 
 
 # --------------------------------------------------------------------------
-# Fully-jitted dense solver (performance path; same math, fixed iteration
-# batches with residual-based early exit via lax.while_loop).
+# Fully-jitted dense solver (performance path; the iteration core itself
+# lives in ``core.engine`` — this is the option plumbing around it).
 # --------------------------------------------------------------------------
 
 def opts_static(opts: PDHGOptions, sigma_read: float = 0.0) -> tuple:
-    """The hashable option tuple ``_solve_jit_core`` consumes (positional
-    unpack — keep in sync with the head of that function, and nowhere
-    else: ``solve_jit`` and ``runtime.batch`` both build it through
-    here)."""
+    """The hashable option tuple ``engine.solve_core`` consumes
+    (positional unpack — keep in sync with the head of that function, and
+    nowhere else: ``solve_jit``, ``runtime.batch`` and
+    ``crossbar.solver`` all build it through here).  ``opts.kernel`` is
+    part of the tuple, so compiled-executable caches keyed on it never
+    serve one update backend's executable to the other."""
+    if opts.kernel not in engine.KERNELS:
+        raise ValueError(f"unknown update kernel {opts.kernel!r}; "
+                         f"expected one of {engine.KERNELS}")
     return (opts.max_iters, opts.tol, opts.eta, opts.omega, opts.gamma,
             opts.check_every, opts.restart_beta if opts.restart else 0.0,
-            float(sigma_read))
+            float(sigma_read), opts.kernel)
 
 
-def _solve_jit_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key,
-                    opts_static):
-    """K_fwd ~ K (dual step), K_adj ~ K^T (primal step).
-
-    On an ideal backend K_adj == K_fwd.T; on a programmed crossbar the two
-    blocks of M are physically distinct cells, so they carry independent
-    programming error.  ``sigma_read`` > 0 adds multiplicative
-    cycle-to-cycle read noise per MVM (Assumptions 1-4).
-    """
-    (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
-     sigma_read) = opts_static
-    m, n = K_fwd.shape
-    dt = K_fwd.dtype
-    tau0 = eta / (omega * rho)
-    sigma0 = eta * omega / rho
-    key, kx, ky = jax.random.split(key, 3)
-    x0 = jnp.clip(jax.random.normal(kx, (n,), dt), lb, ub)
-    y0 = jax.random.normal(ky, (m,), dt)
-
-    def mvm_fwd(v, key):
-        w = K_fwd @ v
-        if sigma_read > 0.0:
-            g = jnp.clip(jax.random.normal(key, w.shape, dt), -4.0, 4.0)
-            w = w * (1.0 + sigma_read * g)
-        return w
-
-    def mvm_adj(v, key):
-        w = K_adj @ v
-        if sigma_read > 0.0:
-            g = jnp.clip(jax.random.normal(key, w.shape, dt), -4.0, 4.0)
-            w = w * (1.0 + sigma_read * g)
-        return w
-
-    def half_iter(_, state):
-        x, x_prev, y, tau, sigma, xs, ys, cnt, rk = state
-        rk, k1, k2 = jax.random.split(rk, 3)
-        theta_k = 1.0 / jnp.sqrt(1.0 + 2.0 * gamma * tau)
-        tau_n = theta_k * tau
-        sigma_n = sigma / theta_k
-        x_bar = x + theta_k * (x - x_prev)
-        y_n = y + sigma_n * Sigma * (b - mvm_fwd(x_bar, k1))
-        x_n = jnp.clip(x - tau_n * T * (c - mvm_adj(y_n, k2)), lb, ub)
-        return (x_n, x, y_n, tau_n, sigma_n, xs + x_n, ys + y_n, cnt + 1.0, rk)
-
-    def merit_of(x, x_prev, y):
-        # residual check on the same (noisy) accelerator products
-        return kkt_residuals(x, x_prev, y, c, b, K_fwd @ x, K_adj @ y,
-                             lb=lb, ub=ub).max
-
-    def body(state):
-        (x, x_prev, y, tau, sigma, it, merit, xs, ys, cnt, m_restart,
-         rk) = state
-        inner = jax.lax.fori_loop(
-            0, check_every, half_iter,
-            (x, x_prev, y, tau, sigma, xs, ys, cnt, rk)
-        )
-        x, x_prev, y, tau, sigma, xs, ys, cnt, rk = inner
-        merit = merit_of(x, x_prev, y)
-        # adaptive restart on the ergodic average (PDLP-style)
-        x_avg = xs / jnp.maximum(cnt, 1.0)
-        y_avg = ys / jnp.maximum(cnt, 1.0)
-        merit_avg = merit_of(x_avg, x_avg, y_avg)
-        do_restart = merit_avg < restart_beta * m_restart
-        use_avg = jnp.logical_or(
-            jnp.logical_and(do_restart, merit_avg < merit),
-            merit_avg <= tol,   # adopt the average if it already satisfies tol
-        )
-        x = jnp.where(use_avg, x_avg, x)
-        y = jnp.where(use_avg, y_avg, y)
-        x_prev = jnp.where(use_avg, x_avg, x_prev)
-        m_restart = jnp.where(do_restart, jnp.minimum(merit_avg, merit),
-                              m_restart)
-        xs = jnp.where(do_restart, jnp.zeros_like(xs), xs)
-        ys = jnp.where(do_restart, jnp.zeros_like(ys), ys)
-        cnt = jnp.where(do_restart, 0.0, cnt)
-        merit = jnp.minimum(merit, merit_avg)
-        return (x, x_prev, y, tau, sigma, it + check_every, merit, xs, ys,
-                cnt, m_restart, rk)
-
-    def cond(state):
-        it, merit = state[5], state[6]
-        return jnp.logical_and(it < max_iters, merit > tol)
-
-    init = (x0, x0, y0, jnp.asarray(tau0, dt), jnp.asarray(sigma0, dt),
-            jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dt),
-            jnp.zeros_like(x0), jnp.zeros_like(y0), jnp.asarray(0.0, dt),
-            jnp.asarray(jnp.inf, dt), key)
-    out = jax.lax.while_loop(cond, body, init)
-    x, _, y, _, _, it, merit = out[:7]
-    return x, y, it, merit
+# Backwards-compatible alias: the dense jit core now lives in the engine.
+_solve_jit_core = engine.solve_core
 
 
 def solve_jit(
@@ -409,12 +326,9 @@ def solve_jit(
     else:
         Keff = jnp.sqrt(Sigma)[:, None] * Kf * jnp.sqrt(T)[None, :]
         rho = lanczos_svd_jit(build_sym_block(Keff), k_max=opts.lanczos_iters)
-        if sigma_read > 0.0:
-            # Lemma 2 safety: widen the margin by the noise bound so the
-            # coupling holds for the true norm despite the noisy estimate.
-            rho = rho / (1.0 - min(4.0 * sigma_read, 0.5))
+        rho = engine.lemma2_margin(rho, sigma_read)
     static = opts_static(opts, sigma_read)
-    core = jax.jit(_solve_jit_core, static_argnums=(10,))
+    core = jax.jit(engine.solve_core, static_argnums=(10,))
     x, y, it, merit = core(
         Kf, Ka, scaled.b, scaled.c, scaled.lb, scaled.ub, T, Sigma, rho,
         jax.random.PRNGKey(opts.seed + 1), static,
@@ -425,17 +339,14 @@ def solve_jit(
         x, x, y, scaled.c, scaled.b, scaled.K @ x, scaled.K.T @ y,
         lb=scaled.lb, ub=scaled.ub,
     )
-    # Device-MVM accounting aligned with the host path (``accel.stats``):
-    # Lanczos (1 MVM/iter, skipped under norm_override) + PDHG (2/iter) +
-    # residual checks (4 per check: x/y pair for the current AND the
-    # averaged iterate — the jitted body always evaluates both).
     it_i = int(it)
     lanczos_mvms = 0 if opts.norm_override is not None else opts.lanczos_iters
-    n_checks = max(1, it_i // max(1, opts.check_every))
     return PDHGResult(
         status="optimal" if float(merit) <= opts.tol else "iteration_limit",
         x=x_orig, y=y_orig, obj=float(lp.c @ x_orig),
         iterations=it_i, residuals=res, sigma_max=float(rho),
         lanczos_iters=lanczos_mvms,
-        mvm_calls=lanczos_mvms + 2 * it_i + 4 * n_checks,
+        mvm_calls=engine.mvm_accounting(it_i, opts.check_every,
+                                        lanczos_mvms),
+        merit=float(merit),
     )

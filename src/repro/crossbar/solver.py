@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import engine
 from ..core import pdhg as pdhg_mod
 from ..core.pdhg import PDHGOptions, PDHGResult
 from ..core.lanczos import lanczos_svd_jit
@@ -116,10 +117,14 @@ def make_crossbar_bucket_pipeline(opts: PDHGOptions, device: DeviceModel):
     Per instance: Ruiz/diagonal preconditioning, differential-pair
     programming of M (independent error on the K and K^T blocks), Lanczos
     on the PROGRAMMED operator (or ``opts.norm_override``), then the
-    jitted PDHG core with the device's read noise.  Returns unscaled
-    (xs, ys, iterations, merits, rhos, nz) — ``nz`` is the per-instance
-    count of programmed differential pairs feeding the vectorized write
-    ledger.
+    engine loop with the device's read noise.  ``opts.kernel`` selects
+    the backends: ``"jnp"`` decodes the programmed blocks and runs the
+    dense operator; ``"pallas"`` keeps the conductance pair ON DEVICE and
+    issues every solve MVM through the tiled differential-pair kernel
+    (``engine.crossbar_operator`` -> ``kernels.ops.crossbar_mvm``) with
+    the fused update kernels.  Returns unscaled (xs, ys, iterations,
+    merits, rhos, nz) — ``nz`` is the per-instance count of programmed
+    differential pairs feeding the vectorized write ledger.
     """
     static = opts_static(opts, device.sigma_read)
 
@@ -142,12 +147,16 @@ def make_crossbar_bucket_pipeline(opts: PDHGOptions, device: DeviceModel):
             # operator norm of the operator actually executed (Lemma 2
             # margin widened for the noisy estimate, as in solve_jit)
             Keff = jnp.sqrt(Sigma)[:, None] * K_fwd * jnp.sqrt(T)[None, :]
-            rho = lanczos_svd_jit(build_sym_block(Keff),
-                                  k_max=opts.lanczos_iters)
-            if device.sigma_read > 0.0:
-                rho = rho / (1.0 - min(4.0 * device.sigma_read, 0.5))
-        x, y, it, merit = pdhg_mod._solve_jit_core(
-            K_fwd, K_adj, bs, cs, lbs, ubs, T, Sigma, rho, solve_key, static)
+            rho = engine.lemma2_margin(
+                lanczos_svd_jit(build_sym_block(Keff),
+                                k_max=opts.lanczos_iters),
+                device.sigma_read)
+        op = (engine.crossbar_operator(g_pos, g_neg, scale, m, n,
+                                       sigma_read=device.sigma_read)
+              if opts.kernel == "pallas" else None)   # None -> dense decode
+        x, y, it, merit = engine.solve_core(
+            K_fwd, K_adj, bs, cs, lbs, ubs, T, Sigma, rho, solve_key,
+            static, operator=op)
         return D2 * x, D1 * y, it, merit, rho, nz
 
     def pipeline(Ks, bs, cs, lbs, ubs, keys):
@@ -170,11 +179,13 @@ class CrossbarBatchSolver(BatchSolver):
 
     def __init__(self, opts: PDHGOptions = PDHGOptions(), *,
                  device: DeviceModel = EPIRAM, mesh=None,
-                 batch_axes: Tuple[str, ...] = ("data",)):
+                 batch_axes: Tuple[str, ...] = ("data",),
+                 kernel: Optional[str] = None):
         super().__init__(
             opts, mesh=mesh, batch_axes=batch_axes,
             sigma_read=device.sigma_read,
-            tile=(device.crossbar_rows, device.crossbar_cols))
+            tile=(device.crossbar_rows, device.crossbar_cols),
+            kernel=kernel)
         self.device = device
 
     def _device_signature(self):
@@ -200,8 +211,8 @@ class CrossbarBatchSolver(BatchSolver):
             fill = charge_write(ledger, self.device, float(nzs[k]),
                                 pairs_logical=(m + n) ** 2,
                                 pairs_total=pairs_total)
-            n_checks = max(1, it // max(1, self.opts.check_every))
-            pdhg_mvms = 2 * it + 4 * n_checks
+            pdhg_mvms = engine.mvm_accounting(
+                it, self.opts.check_every, 0)
             active_cells = 2.0 * pairs_total * fill
             _charge_reads(ledger, self.device, lanczos_mvms + pdhg_mvms,
                           active_cells)
@@ -217,6 +228,7 @@ class CrossbarBatchSolver(BatchSolver):
                 residuals=res, sigma_max=float(rhos[k]),
                 lanczos_iters=lanczos_mvms,
                 mvm_calls=lanczos_mvms + pdhg_mvms,
+                merit=merit,
             )
             results[i] = CrossbarSolveReport(
                 result=result, ledger=ledger, device=self.device,

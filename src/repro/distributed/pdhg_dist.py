@@ -14,16 +14,18 @@ Vectors are the only thing that ever moves (two small psums per
 iteration); K is written once at setup.  This is the paper's
 communication pattern mapped onto jax.lax collectives.
 
+The iteration math itself is ``core.engine``'s (shared with the jit /
+batch / crossbar paths); this module contributes the psum-tiled operator
+backend's data layout and the psum-reduced KKT merit.
+
 Exposes:
   * ``make_dist_step``  — jitted k-iteration step (dry-run / roofline unit)
-  * ``solve_dist``      — full solver: pad, shard, while_loop with KKT
+  * ``solve_dist``      — full solver: pad, shard, engine loop with KKT
                           checks + adaptive restarts, unscale.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..core import engine
 from ..core import pdhg as pdhg_mod
 from ..core.pdhg import PDHGOptions, PDHGResult
 from ..core.residuals import KKTResiduals
@@ -70,44 +73,6 @@ def _dist_kkt_max(x, x_prev, y, c, b, Kx, KTy, lb, ub, Rax, Cax):
         - jnp.vdot(jnp.where(has_ub, ub, 0.0), lam_hi))
     r_gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
     return jnp.maximum(jnp.maximum(r_pri, r_dual), jnp.maximum(r_iter, r_gap))
-
-
-def _tile_mv(K_loc, v):
-    """Tile MVM in the tile dtype with f32 accumulation.
-
-    When K tiles are bf16 (the TPU analogue of conductance quantization —
-    hillclimb 1), the input vector is cast down so the dot reads bf16
-    operands end-to-end; accumulation stays f32 (MXU native).
-    """
-    return jax.lax.dot_general(
-        K_loc, v.astype(K_loc.dtype),
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-
-
-def _tile_mv_t(K_loc, v):
-    return jax.lax.dot_general(
-        K_loc, v.astype(K_loc.dtype),
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-
-
-def _iteration(K_loc, b_loc, c_loc, lb_loc, ub_loc, T_loc, Sig_loc,
-               Rax, Cax, gamma, state):
-    x, x_prev, y, tau, sigma = state
-    theta_k = 1.0 / jnp.sqrt(1.0 + 2.0 * gamma * tau)
-    tau_n = theta_k * tau
-    sigma_n = sigma / theta_k
-    x_bar = x + theta_k * (x - x_prev)
-    # dual step: Kx_bar = psum_cols(K_loc @ x_bar_loc)
-    Kxb = jax.lax.psum(_tile_mv(K_loc, x_bar).astype(x.dtype), Cax)
-    y_n = y + sigma_n * Sig_loc * (b_loc - Kxb)
-    # primal step: K^T y = psum_rows(K_loc^T @ y_loc)
-    KTy = jax.lax.psum(_tile_mv_t(K_loc, y_n).astype(x.dtype), Rax)
-    x_n = jnp.clip(x - tau_n * T_loc * (c_loc - KTy), lb_loc, ub_loc)
-    return (x_n, x, y_n, tau_n, sigma_n)
 
 
 @dataclasses.dataclass
@@ -163,17 +128,26 @@ def shard_problem(scaled, T, Sigma, mesh: Mesh,
 def make_dist_step(mesh: Mesh, n_inner: int = 1, gamma: float = 0.0):
     """k-iteration distributed PDHG step (the dry-run/roofline unit).
 
-    Returns a function  (K, b, c, lb, ub, T, Sigma, x, x_prev, y, tau,
-    sigma) -> (x, x_prev, y, tau, sigma)  running ``n_inner`` iterations.
+    Returns a function  (K, b, c, lb, ub, T, Sigma, x, x_bar, y, tau,
+    sigma) -> (x, x_bar, y, tau, sigma)  running ``n_inner`` engine
+    iterations over the psum-tiled operator backend.  State is the
+    engine's carried form: ``x_bar`` is the next iteration's extrapolated
+    point and ``tau``/``sigma`` already include its theta factor (with
+    ``gamma=0`` — the dry-run default — these coincide with the raw step
+    sizes).
     """
     Rax, Cax = row_axes(mesh), col_axes(mesh)
 
-    def local_fn(K, b, c, lb, ub, T, Sig, x, x_prev, y, tau, sigma):
-        it = functools.partial(_iteration, K, b, c, lb, ub, T, Sig,
-                               Rax, Cax, gamma)
-        state = (x, x_prev, y, tau, sigma)
-        state = jax.lax.fori_loop(0, n_inner, lambda i, s: it(s), state)
-        return state
+    def local_fn(K, b, c, lb, ub, T, Sig, x, x_bar, y, tau, sigma):
+        op = engine.sharded_operator(K, Rax, Cax)
+        state = engine.PDHGState(x=x, x_prev=x, x_bar=x_bar, y=y,
+                                 tau=tau, sigma=sigma)
+        state = jax.lax.fori_loop(
+            0, n_inner,
+            lambda i, s: engine.pdhg_step(op, engine.JNP_UPDATES, b, c,
+                                          lb, ub, T, Sig, gamma, s),
+            state)
+        return state.x, state.x_bar, state.y, state.tau, state.sigma
 
     vec_r, vec_c = P(Rax), P(Cax)
     return compat.shard_map(
@@ -211,68 +185,34 @@ def solve_dist(
     dt = prob.b.dtype   # vector dtype (tiles may be bf16)
 
     def local_solve(K, b, c, lb, ub, T, Sig):
-        kx, ky = jax.random.split(jax.random.PRNGKey(opts.seed))
         # deterministic init: every device draws the FULL vector then
-        # slices its block => identical math to the single-device solver.
+        # slices its block => identical draws to the single-device solver
+        # (same PRNGKey(seed+1) threading as ``solve_jit``; on an
+        # unpadded 1-device mesh the iterates coincide bit-for-bit).
+        key, kx, ky = jax.random.split(jax.random.PRNGKey(opts.seed + 1), 3)
         ci = jax.lax.axis_index(Cax)
         ri = jax.lax.axis_index(Rax)
         nloc, mloc = c.shape[0], b.shape[0]
         x0f = jax.random.normal(kx, (n_pad,), dt)
         y0f = jax.random.normal(ky, (m_pad,), dt)
-        x = jnp.clip(jax.lax.dynamic_slice(x0f, (ci * nloc,), (nloc,)), lb, ub)
-        y = jax.lax.dynamic_slice(y0f, (ri * mloc,), (mloc,))
-        tau = jnp.asarray(opts.eta / (opts.omega * rho), dt)
-        sigma = jnp.asarray(opts.eta * opts.omega / rho, dt)
-        it_fn = functools.partial(_iteration, K, b, c, lb, ub, T, Sig,
-                                  Rax, Cax, opts.gamma)
+        x0 = jnp.clip(jax.lax.dynamic_slice(x0f, (ci * nloc,), (nloc,)),
+                      lb, ub)
+        y0 = jax.lax.dynamic_slice(y0f, (ri * mloc,), (mloc,))
+        op = engine.sharded_operator(K, Rax, Cax)
 
-        def merit_of(x, x_prev, y):
-            Kx = jax.lax.psum(_tile_mv(K, x).astype(x.dtype), Cax)
-            KTy = jax.lax.psum(_tile_mv_t(K, y).astype(x.dtype), Rax)
+        def residual_fn(x, x_prev, y, Kx, KTy):
             return _dist_kkt_max(x, x_prev, y, c, b, Kx, KTy, lb, ub,
                                  Rax, Cax)
 
-        def body(state):
-            (x, x_prev, y, tau, sigma, it, merit, xs, ys, cnt,
-             m_restart) = state
-            inner = jax.lax.fori_loop(
-                0, opts.check_every,
-                lambda i, s: it_fn(s[:5]) + (s[5] + x, s[6] + y, s[7] + 1.0),
-                (x, x_prev, y, tau, sigma, xs, ys, cnt),
-            )
-            x, x_prev, y, tau, sigma, xs, ys, cnt = inner
-            merit = merit_of(x, x_prev, y)
-            x_avg = xs / jnp.maximum(cnt, 1.0)
-            y_avg = ys / jnp.maximum(cnt, 1.0)
-            merit_avg = merit_of(x_avg, x_avg, y_avg)
-            beta = opts.restart_beta if opts.restart else 0.0
-            do_restart = merit_avg < beta * m_restart
-            use_avg = jnp.logical_or(
-                jnp.logical_and(do_restart, merit_avg < merit),
-                merit_avg <= opts.tol)
-            x = jnp.where(use_avg, x_avg, x)
-            y = jnp.where(use_avg, y_avg, y)
-            x_prev = jnp.where(use_avg, x_avg, x_prev)
-            m_restart = jnp.where(do_restart,
-                                  jnp.minimum(merit_avg, merit), m_restart)
-            xs = jnp.where(do_restart, jnp.zeros_like(xs), xs)
-            ys = jnp.where(do_restart, jnp.zeros_like(ys), ys)
-            cnt = jnp.where(do_restart, 0.0, cnt)
-            merit = jnp.minimum(merit, merit_avg)
-            return (x, x_prev, y, tau, sigma, it + opts.check_every, merit,
-                    xs, ys, cnt, m_restart)
-
-        def cond(state):
-            return jnp.logical_and(state[5] < opts.max_iters,
-                                   state[6] > opts.tol)
-
-        init = (x, x, y, tau, sigma, jnp.asarray(0, jnp.int32),
-                jnp.asarray(jnp.inf, dt), jnp.zeros_like(x),
-                jnp.zeros_like(y), jnp.asarray(0.0, dt),
-                jnp.asarray(jnp.inf, dt))
-        out = jax.lax.while_loop(cond, body, init)
-        x, _, y, _, _, it, merit = out[:7]
-        return x, y, it, merit
+        return engine.pdhg_loop(
+            op, engine.JNP_UPDATES, b, c, lb, ub, T, Sig,
+            x0, y0, opts.eta / (opts.omega * rho),
+            opts.eta * opts.omega / rho, key,
+            max_iters=opts.max_iters, tol=opts.tol, gamma=opts.gamma,
+            check_every=opts.check_every,
+            restart_beta=opts.restart_beta if opts.restart else 0.0,
+            residual_fn=residual_fn,
+        )
 
     vec_r, vec_c = P(Rax), P(Cax)
     solve_fn = jax.jit(compat.shard_map(
@@ -289,15 +229,14 @@ def solve_dist(
     x_orig = np.asarray(scaled.D2) * x
     y_orig = np.asarray(scaled.D1) * y
     res_obj = KKTResiduals(*([jnp.asarray(float(merit))] * 4))
-    # same accounting as core.pdhg.solve_jit: Lanczos + 2 MVMs/iter +
-    # 4 per residual check (current + averaged iterate pairs)
     it_i = int(it)
     lanczos_mvms = 0 if opts.norm_override is not None else opts.lanczos_iters
-    n_checks = max(1, it_i // max(1, opts.check_every))
     return PDHGResult(
         status="optimal" if float(merit) <= opts.tol else "iteration_limit",
         x=x_orig, y=y_orig, obj=float(lp.c @ x_orig),
         iterations=it_i, residuals=res_obj, sigma_max=rho,
         lanczos_iters=lanczos_mvms,
-        mvm_calls=lanczos_mvms + 2 * it_i + 4 * n_checks,
+        mvm_calls=engine.mvm_accounting(it_i, opts.check_every,
+                                        lanczos_mvms),
+        merit=float(merit),
     )

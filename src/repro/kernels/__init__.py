@@ -2,7 +2,12 @@
 #   crossbar_mvm  — the analog MVM (the operation the paper accelerates),
 #                   as a tiled differential-pair MXU matmul.
 #   pdhg_update   — fused primal/dual vector updates (single VMEM pass).
-# Validated in interpret=True mode on CPU against ref.py oracles.
-from . import crossbar_mvm, ops, pdhg_update, ref
+# Validated in interpret=True mode on CPU against ref.py oracles; every
+# entry point auto-detects interpret mode through kernels.interpret.
+# Solvers reach these through core.engine's operator/update backends
+# (PDHGOptions.kernel = "pallas").
+from . import crossbar_mvm, interpret, ops, pdhg_update, ref
+from .interpret import interpret_default
 
-__all__ = ["crossbar_mvm", "ops", "pdhg_update", "ref"]
+__all__ = ["crossbar_mvm", "interpret", "interpret_default", "ops",
+           "pdhg_update", "ref"]

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .interpret import resolve_interpret
+
 # 128 = MXU tile edge; each block packs a 2x2 grid of 64x64 crossbars.
 TILE_R = 128
 TILE_C = 128
@@ -44,10 +46,12 @@ def _mvm_kernel(gp_ref, gn_ref, v_ref, gain_ref, out_ref, *, n_col_tiles):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     g = gp_ref[...] - gn_ref[...]                     # (TR, TC) in VMEM
+    # accumulate at least f32 (MXU native), never BELOW the tile dtype —
+    # x64 interpret-mode validation must not round through f32
     part = jax.lax.dot_general(
         g, v_ref[...],
         dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=jnp.promote_types(g.dtype, jnp.float32),
     )                                                  # (TR, 1)
     out_ref[...] += part.astype(out_ref.dtype)
 
@@ -57,10 +61,12 @@ def _mvm_kernel(gp_ref, gn_ref, v_ref, gain_ref, out_ref, *, n_col_tiles):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def crossbar_mvm_padded(g_pos, g_neg, v, gain, *, interpret: bool = True):
+def crossbar_mvm_padded(g_pos, g_neg, v, gain, *,
+                        interpret: bool | None = None):
     """MVM on tile-aligned inputs: R, C multiples of (TILE_R, TILE_C).
 
-    v: (C, 1); gain: (R, 1).  Returns (R, 1).
+    v: (C, 1); gain: (R, 1).  Returns (R, 1).  ``interpret=None``
+    auto-detects the backend via ``kernels.interpret``.
     """
     R, C = g_pos.shape
     assert R % TILE_R == 0 and C % TILE_C == 0, (R, C)
@@ -78,5 +84,5 @@ def crossbar_mvm_padded(g_pos, g_neg, v, gain, *, interpret: bool = True):
         ],
         out_specs=pl.BlockSpec((TILE_R, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, 1), g_pos.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(g_pos, g_neg, v, gain)

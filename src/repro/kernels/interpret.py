@@ -1,0 +1,20 @@
+"""Shared interpret-mode auto-detection for every Pallas entry point.
+
+One rule for the whole kernel package: interpreted on CPU (the
+container's validation mode), compiled Mosaic on a real TPU backend.
+Both the high-level ``ops`` wrappers and the low-level ``*_padded``
+kernels default through here, so a real-TPU caller of either API never
+silently runs interpreted.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """``None`` -> backend auto-detection; anything else passes through."""
+    return interpret_default() if interpret is None else bool(interpret)

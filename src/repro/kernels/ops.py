@@ -6,17 +6,12 @@ mode; compiled Mosaic on real TPU).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from . import crossbar_mvm as _xbar
 from . import pdhg_update as _upd
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() == "cpu"
+from .interpret import interpret_default as _interpret_default
 
 
 def _pad_to(a, mult, axis):

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .interpret import resolve_interpret
+
 BLOCK = 256
 
 
@@ -47,8 +49,11 @@ def _col(a):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def primal_update_padded(x, kty, c, T, lb, ub, tau, theta, *,
-                         interpret: bool = True):
-    """Inputs are (N, 1) with N % BLOCK == 0; tau/theta are (1, 1)."""
+                         interpret: bool | None = None):
+    """Inputs are (N, 1) with N % BLOCK == 0; tau/theta are (1, 1).
+
+    ``interpret=None`` auto-detects the backend (interpreted on CPU,
+    compiled Mosaic on real TPU) via ``kernels.interpret``."""
     N = x.shape[0]
     assert N % BLOCK == 0
     grid = (N // BLOCK,)
@@ -60,13 +65,17 @@ def primal_update_padded(x, kty, c, T, lb, ub, tau, theta, *,
         in_specs=[vec, vec, vec, vec, vec, vec, scl, scl],
         out_specs=[vec, vec],
         out_shape=[jax.ShapeDtypeStruct((N, 1), x.dtype)] * 2,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, kty, c, T, lb, ub, tau, theta)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def dual_update_padded(y, kxbar, b, Sigma, sigma, *, interpret: bool = True):
-    """Inputs are (M, 1) with M % BLOCK == 0; sigma is (1, 1)."""
+def dual_update_padded(y, kxbar, b, Sigma, sigma, *,
+                       interpret: bool | None = None):
+    """Inputs are (M, 1) with M % BLOCK == 0; sigma is (1, 1).
+
+    ``interpret=None`` auto-detects the backend like
+    ``primal_update_padded``."""
     M = y.shape[0]
     assert M % BLOCK == 0
     grid = (M // BLOCK,)
@@ -78,5 +87,5 @@ def dual_update_padded(y, kxbar, b, Sigma, sigma, *, interpret: bool = True):
         in_specs=[vec, vec, vec, vec, scl],
         out_specs=vec,
         out_shape=jax.ShapeDtypeStruct((M, 1), y.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(y, kxbar, b, Sigma, sigma)

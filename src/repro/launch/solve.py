@@ -58,6 +58,12 @@ def main(argv=None):
                     choices=["none", "epiram", "taox"],
                     help="with --backend batch: serve the stream through "
                          "the device-tile-aware crossbar simulator")
+    ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
+                    help="engine update backend: reference jnp vector "
+                         "algebra or the fused Pallas kernels (interpret "
+                         "mode auto-detected; on the crossbar batch path "
+                         "'pallas' also routes every MVM through the "
+                         "differential-pair crossbar kernel)")
     ap.add_argument("--tol", type=float, default=1e-6)
     ap.add_argument("--max-iters", type=int, default=40000)
     ap.add_argument("--seed", type=int, default=0)
@@ -65,10 +71,15 @@ def main(argv=None):
     if args.device != "none" and args.backend != "batch":
         ap.error("--device only applies to --backend batch "
                  "(use --backend epiram/taox for single instances)")
+    if args.kernel != "jnp" and args.backend == "distributed":
+        ap.error("--kernel pallas is not wired into the shard_map path "
+                 "(the distributed engine runs the psum-tiled operator "
+                 "with jnp updates)")
 
     jax.config.update("jax_enable_x64", True)
     opts = PDHGOptions(max_iters=args.max_iters, tol=args.tol,
-                       check_every=100, seed=args.seed)
+                       check_every=100, seed=args.seed,
+                       kernel=args.kernel)
     if args.backend == "batch":
         specs = (args.instances or args.instance).split(",")
         lps = [load_instance(s.strip(), seed=args.seed + i)

@@ -37,7 +37,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..core import pdhg as pdhg_mod
+from ..core import engine
 from ..core.pdhg import PDHGOptions
 from ..core.pdhg import opts_static  # noqa: F401  (canonical home; re-export)
 from ..lp.problem import StandardLP
@@ -112,7 +112,9 @@ def stack_problems(lps: Sequence[StandardLP], m: Optional[int] = None,
 # -------------------------------------------------------------- pipeline ---
 
 def _single_solve(K, b, c, lb, ub, T, Sigma, rho, key, static):
-    return pdhg_mod._solve_jit_core(
+    # The iteration core is core.engine's; ``static[-1]`` (opts.kernel)
+    # selects the jnp vs fused-Pallas update backend per executable.
+    return engine.solve_core(
         K, K.T, b, c, lb, ub, T, Sigma, rho, key, static)
 
 
@@ -139,8 +141,12 @@ def _prep_one(K, b, c, lb, ub, opts: PDHGOptions):
 
     (Ks, bs, cs, lbs, ubs, T, Sigma, D1, D2) = prep_scale(
         K, b, c, lb, ub, opts)
-    Keff = jnp.sqrt(Sigma)[:, None] * Ks * jnp.sqrt(T)[None, :]
-    rho = lanczos_svd_jit(build_sym_block(Keff), k_max=opts.lanczos_iters)
+    if opts.norm_override is not None:
+        rho = jnp.asarray(opts.norm_override, Ks.dtype)
+    else:
+        Keff = jnp.sqrt(Sigma)[:, None] * Ks * jnp.sqrt(T)[None, :]
+        rho = lanczos_svd_jit(build_sym_block(Keff),
+                              k_max=opts.lanczos_iters)
     return (Ks, bs, cs, lbs, ubs, T, Sigma, rho, D1, D2)
 
 
@@ -158,10 +164,10 @@ def make_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
         prepped = jax.vmap(functools.partial(_prep_one, opts=opts))(
             Ks, bs, cs, lbs, ubs)
         (Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos, D1s, D2s) = prepped
-        if sigma_read > 0.0:
-            # Lemma 2 safety margin under noisy norm estimation (matches
-            # core.pdhg.solve_jit).
-            rhos = rhos / (1.0 - min(4.0 * sigma_read, 0.5))
+        if opts.norm_override is None:
+            # only the (noisy) Lanczos estimate gets the Lemma-2 margin;
+            # an explicit norm_override is trusted as-is (= solve_jit)
+            rhos = engine.lemma2_margin(rhos, sigma_read)
         solver = functools.partial(_single_solve, static=static)
         xs, ys, its, merits = jax.vmap(solver)(
             Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos, keys)
@@ -184,6 +190,7 @@ class BatchItemResult:
     merit: float
     converged: bool
     bucket: Tuple[int, int]
+    mvm_calls: int = 0          # device MVMs (engine.mvm_accounting)
 
     @property
     def status(self) -> str:
@@ -201,17 +208,24 @@ class BatchSolver:
 
     ``tile`` switches bucketing to device-tile mode (multiples of the
     physical crossbar dims); ``sigma_read`` adds multiplicative per-MVM
-    read noise inside the vmapped solver (both are part of the executable
-    cache key).  Subclasses (``crossbar.solver.CrossbarBatchSolver``)
-    override ``_make_pipeline``/``_collect``/``_device_signature`` to run
-    full device physics in the same bucketed harness.
+    read noise inside the vmapped solver; ``kernel`` ("jnp" | "pallas")
+    selects the engine's update backend (all three are part of the
+    executable cache key — executables never cross kernels).  Subclasses
+    (``crossbar.solver.CrossbarBatchSolver``) override
+    ``_make_pipeline``/``_collect``/``_device_signature`` to run full
+    device physics in the same bucketed harness.
     """
 
     def __init__(self, opts: PDHGOptions = PDHGOptions(), *,
                  mesh=None, batch_axes: Tuple[str, ...] = ("data",),
                  min_bucket: int = MIN_BUCKET,
                  sigma_read: float = 0.0,
-                 tile: Optional[Tuple[int, int]] = None):
+                 tile: Optional[Tuple[int, int]] = None,
+                 kernel: Optional[str] = None):
+        if kernel is not None:
+            # convenience override; the kernel choice rides in opts and
+            # therefore in every executable cache signature
+            opts = dataclasses.replace(opts, kernel=kernel)
         self.opts = opts
         self.mesh = mesh
         self.batch_axes = tuple(batch_axes)
@@ -252,7 +266,12 @@ class BatchSolver:
 
     def _executable(self, mb: int, nb: int, B: int, dtype):
         key = (mb, nb, B, jnp.dtype(dtype).name,
-               opts_static(self.opts, self.sigma_read), self.tile,
+               opts_static(self.opts, self.sigma_read),
+               # prep-stage options that shape the pipeline but live
+               # outside the solve-core static tuple
+               (self.opts.ruiz_iters, self.opts.lanczos_iters,
+                self.opts.norm_override),
+               self.tile,
                self._device_signature(),
                None if self.mesh is None else
                (tuple(self.mesh.axis_names),
@@ -294,16 +313,21 @@ class BatchSolver:
         xs, ys, its, merits = out
         xs, ys = np.asarray(xs), np.asarray(ys)
         its, merits = np.asarray(its), np.asarray(merits)
+        lanczos = (0 if self.opts.norm_override is not None
+                   else self.opts.lanczos_iters)
         for k, i in enumerate(idxs):
             lp = lps[i]
             m, n = lp.K.shape
             x = xs[k, :n]
+            it = int(its[k])
             results[i] = BatchItemResult(
                 name=lp.name, x=x, y=ys[k, :m],
-                obj=float(lp.c @ x), iterations=int(its[k]),
+                obj=float(lp.c @ x), iterations=it,
                 merit=float(merits[k]),
                 converged=bool(merits[k] <= self.opts.tol),
                 bucket=bucket,
+                mvm_calls=engine.mvm_accounting(
+                    it, self.opts.check_every, lanczos),
             )
 
     def solve_stream(self, lps: Sequence[StandardLP]) -> List[BatchItemResult]:

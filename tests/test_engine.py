@@ -1,0 +1,271 @@
+"""Engine parity: ONE iteration core, N operator backends, 2 update
+backends.
+
+Every solver path (host / jit / batch / crossbar / distributed) runs
+``core.engine``'s step; these tests pin that the backends agree iterate-
+for-iterate in exact mode, that the MVM-ledger accounting is the single
+``engine.mvm_accounting`` formula everywhere, and that the ``kernel``
+flag (jnp vs fused Pallas) never leaks across executable caches."""
+import dataclasses as dc
+import inspect
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import NoiseModel, PDHGOptions, engine, solve, solve_jit
+from repro.core.pdhg import opts_static, prepare
+from repro.core.symblock import encode_exact
+from repro.lp import random_standard_lp
+from repro.runtime import BatchSolver
+
+
+def _prepped(seed=0, m=8, n=14):
+    """Common preconditioned problem + exact operator norm."""
+    lp = random_standard_lp(m, n, seed=seed)
+    scaled, T, Sigma = prepare(lp, PDHGOptions())
+    Keff = np.sqrt(np.asarray(Sigma))[:, None] * np.asarray(scaled.K) \
+        * np.sqrt(np.asarray(T))[None, :]
+    rho = float(np.linalg.svd(Keff, compute_uv=False)[0])
+    return lp, scaled, T, Sigma, rho
+
+
+# ------------------------------------------------------ backend parity ---
+
+def test_engine_backends_identical_iterates(x64):
+    """host-style accel / jit dense / vmapped batch / fused Pallas all run
+    the SAME seeded 2-check exact-mode solve to identical iterates."""
+    _, scaled, T, Sigma, rho = _prepped(seed=0)
+    m, n = scaled.K.shape
+    b, c, lb, ub = scaled.b, scaled.c, scaled.lb, scaled.ub
+    key = jax.random.PRNGKey(42)
+    static = (128, 1e-30, 0.95, 1.0, 0.0, 64, 0.5, 0.0, "jnp")
+
+    # (a) jitted dense engine (the solve_jit / batch core)
+    core = jax.jit(engine.solve_core, static_argnums=(10,))
+    x_jit, y_jit, it_jit, _ = core(scaled.K, scaled.K.T, b, c, lb, ub,
+                                   T, Sigma, rho, key, static)
+    assert int(it_jit) == 128
+
+    # (b) eager host-style engine over an Accel handle
+    op = engine.accel_operator(encode_exact(scaled.K))
+    key2, x0, y0 = engine.draw_init(key, m, n, lb, ub, scaled.K.dtype)
+    x_acc, y_acc, _, _ = engine.pdhg_loop(
+        op, engine.JNP_UPDATES, b, c, lb, ub, T, Sigma, x0, y0,
+        0.95 / rho, 0.95 * rho / rho**2, key2,
+        max_iters=128, tol=1e-30, gamma=0.0, check_every=64,
+        restart_beta=0.5)
+
+    # (c) vmapped batch-of-2 engine; slot 0 carries the same key
+    keys = jnp.stack([key, jax.random.PRNGKey(7)])
+    xs, ys, _, _ = jax.jit(jax.vmap(
+        lambda k: engine.solve_core(scaled.K, scaled.K.T, b, c, lb, ub,
+                                    T, Sigma, rho, k, static)))(keys)
+
+    # (d) fused Pallas update backend
+    x_pal, y_pal, _, _ = core(scaled.K, scaled.K.T, b, c, lb, ub,
+                              T, Sigma, rho, key,
+                              static[:-1] + ("pallas",))
+
+    for tag, (xv, yv) in {
+        "accel": (x_acc, y_acc),
+        "batch": (xs[0], ys[0]),
+        "pallas": (x_pal, y_pal),
+    }.items():
+        np.testing.assert_allclose(np.asarray(xv), np.asarray(x_jit),
+                                   rtol=1e-12, atol=1e-12, err_msg=tag)
+        np.testing.assert_allclose(np.asarray(yv), np.asarray(y_jit),
+                                   rtol=1e-12, atol=1e-12, err_msg=tag)
+    # distinct key in slot 1 => genuinely different trajectory
+    assert not np.allclose(np.asarray(xs[1]), np.asarray(x_jit))
+
+
+def test_solve_jit_kernel_pallas_matches_jnp(x64):
+    """Public API: the fused-Pallas executable reproduces the jnp one."""
+    lp = random_standard_lp(8, 14, seed=1)
+    mk = lambda k: PDHGOptions(  # noqa: E731
+        max_iters=256, tol=1e-30, check_every=64, kernel=k)
+    r_jnp = solve_jit(lp, mk("jnp"))
+    r_pal = solve_jit(lp, mk("pallas"))
+    np.testing.assert_allclose(r_pal.x, r_jnp.x, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(r_pal.y, r_jnp.y, rtol=1e-9, atol=1e-12)
+    assert r_pal.iterations == r_jnp.iterations
+    assert r_pal.mvm_calls == r_jnp.mvm_calls
+
+
+def test_batch_solver_kernel_parity_and_cache_isolation(x64):
+    """BatchSolver(kernel="pallas") matches jnp to fp tolerance and the
+    executable cache signatures never collide across kernels."""
+    lp = random_standard_lp(8, 14, seed=2)
+    opts = PDHGOptions(max_iters=128, tol=1e-30, check_every=64)
+    s_jnp = BatchSolver(opts)
+    s_pal = BatchSolver(opts, kernel="pallas")
+    r_jnp = s_jnp.solve_stream([lp])[0]
+    r_pal = s_pal.solve_stream([lp])[0]
+    np.testing.assert_allclose(r_pal.x, r_jnp.x, rtol=1e-9, atol=1e-12)
+    assert r_pal.mvm_calls == r_jnp.mvm_calls > 0
+    assert s_pal.opts.kernel == "pallas"
+    # kernel choice is part of the signature: no silent cross-kernel hits
+    assert set(s_jnp._cache).isdisjoint(set(s_pal._cache))
+    assert opts_static(s_jnp.opts)[-1] != opts_static(s_pal.opts)[-1]
+
+
+def test_crossbar_pallas_operator_matches_dense_decode(x64):
+    """kernel="pallas" routes the crossbar pipeline's MVMs through the
+    differential-pair Pallas kernel against the programmed M; with read
+    noise off, iterates must match the dense-decode path."""
+    from repro.crossbar import EPIRAM, CrossbarBatchSolver
+
+    dev = dc.replace(EPIRAM, name="epiram-quiet", sigma_read=0.0)
+    lp = random_standard_lp(10, 18, seed=3)
+    opts = PDHGOptions(max_iters=128, tol=1e-30, check_every=64,
+                       lanczos_iters=8)
+    rep_jnp = CrossbarBatchSolver(opts, device=dev).solve_stream([lp])[0]
+    rep_pal = CrossbarBatchSolver(opts, device=dev,
+                                  kernel="pallas").solve_stream([lp])[0]
+    np.testing.assert_allclose(rep_pal.result.x, rep_jnp.result.x,
+                               rtol=1e-8, atol=1e-10)
+    assert rep_pal.ledger.mvm_count == rep_jnp.ledger.mvm_count
+    # noisy device still converges through the kernel operator
+    noisy = CrossbarBatchSolver(
+        PDHGOptions(max_iters=2000, tol=1e-3, check_every=64,
+                    lanczos_iters=16),
+        device=EPIRAM, kernel="pallas").solve_stream([lp])[0]
+    rel = abs(noisy.result.obj - lp.obj_opt) / abs(lp.obj_opt)
+    assert rel < 5e-2, rel
+
+
+def test_dist_matches_jit_iterates_on_single_device_mesh(x64):
+    """The shard_map path runs the same engine loop: on an unpadded
+    1-device mesh its iterates coincide with solve_jit (restart off so
+    the psum-reduced merit formula cannot steer the trajectory)."""
+    from repro.distributed.pdhg_dist import solve_dist
+    from repro.launch.mesh import make_mesh
+
+    lp = random_standard_lp(10, 18, seed=0)
+    opts = PDHGOptions(max_iters=128, tol=1e-30, check_every=64,
+                       restart=False)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    r_dist = solve_dist(lp, mesh, opts)
+    r_jit = solve_jit(lp, opts)
+    assert r_dist.iterations == r_jit.iterations == 128
+    np.testing.assert_allclose(r_dist.x, r_jit.x, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(r_dist.y, r_jit.y, rtol=1e-9, atol=1e-12)
+
+
+# -------------------------------------------------------- MVM ledger ---
+
+def test_mvm_accounting_is_the_single_formula_everywhere(x64):
+    """jit / batch / dist / crossbar all report engine.mvm_accounting."""
+    from repro.crossbar import TAOX_HFOX, CrossbarBatchSolver
+    from repro.distributed.pdhg_dist import solve_dist
+    from repro.launch.mesh import make_mesh
+
+    lp = random_standard_lp(8, 14, seed=4)
+    opts = PDHGOptions(max_iters=512, tol=1e-30, check_every=64)
+
+    r_jit = solve_jit(lp, opts)
+    assert r_jit.mvm_calls == engine.mvm_accounting(
+        r_jit.iterations, opts.check_every, opts.lanczos_iters)
+
+    r_b = BatchSolver(opts).solve_stream([lp])[0]
+    assert r_b.mvm_calls == engine.mvm_accounting(
+        r_b.iterations, opts.check_every, opts.lanczos_iters)
+
+    r_d = solve_dist(lp, make_mesh((1, 1), ("data", "model")), opts)
+    assert r_d.mvm_calls == engine.mvm_accounting(
+        r_d.iterations, opts.check_every, opts.lanczos_iters)
+
+    rep = CrossbarBatchSolver(
+        PDHGOptions(max_iters=256, tol=1e-30, check_every=64,
+                    lanczos_iters=16),
+        device=TAOX_HFOX).solve_stream([lp])[0]
+    assert rep.result.mvm_calls == engine.mvm_accounting(
+        rep.result.iterations, 64, 16)
+    assert rep.ledger.mvm_count == rep.lanczos_mvms + rep.pdhg_mvms
+
+
+# ---------------------------------------- noisy residual checks (jit) ---
+
+def test_jit_and_host_merits_agree_in_distribution_under_read_noise(x64):
+    """Regression: the jitted merit check used noiseless K products while
+    the host path (and the 4-MVMs-per-check ledger charge) issues NOISY
+    device MVMs.  Both paths now measure the same noise-floor merit: at
+    sigma_read=0.05 the final in-loop merits must agree in distribution
+    (same decade), and sit clearly above the clean tolerance."""
+    lp = random_standard_lp(8, 14, seed=2)
+    sigma = 0.05
+    host_merits, jit_merits = [], []
+    for s in range(4):
+        opts = PDHGOptions(max_iters=384, tol=1e-12, check_every=64,
+                           seed=s)
+        r_h = solve(lp, opts,
+                    noise=NoiseModel(kind="multiplicative", sigma=sigma))
+        host_merits.append(float(r_h.residuals.max))
+        r_j = solve_jit(lp, opts, sigma_read=sigma)
+        jit_merits.append(r_j.merit)
+    gmean = lambda v: float(np.exp(np.mean(np.log(v))))  # noqa: E731
+    gh, gj = gmean(host_merits), gmean(jit_merits)
+    assert gj < 10 * gh and gh < 10 * gj, (host_merits, jit_merits)
+    # the noise floor is visible to the jitted check (a noiseless check
+    # would let merit collapse toward the true residual of the average)
+    assert min(jit_merits) > 1e-6, jit_merits
+
+
+# ------------------------------------------------- interpret defaults ---
+
+def test_padded_kernel_wrappers_autodetect_interpret():
+    """Regression: the low-level ``*_padded`` wrappers hardcoded
+    interpret=True — a real-TPU caller would silently run interpreted.
+    They now default through the shared backend detection."""
+    from repro.kernels import crossbar_mvm as xbar
+    from repro.kernels import interpret_default, ops
+    from repro.kernels import pdhg_update as upd
+
+    for fn in (xbar.crossbar_mvm_padded, upd.primal_update_padded,
+               upd.dual_update_padded):
+        default = inspect.signature(fn).parameters["interpret"].default
+        assert default is None, fn
+    assert ops._interpret_default() is interpret_default()
+    assert interpret_default() == (jax.default_backend() == "cpu")
+    # and the auto-detected default actually runs on this backend
+    col = jnp.ones((upd.BLOCK, 1), jnp.float32)
+    out = upd.dual_update_padded(col, 0 * col, col, col,
+                                 jnp.ones((1, 1), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), 2 * np.ones((upd.BLOCK, 1)))
+
+
+# ------------------------------------------------------- single home ---
+
+def test_step_math_lives_only_in_engine():
+    """Acceptance guard: the PDHG half-iteration (extrapolation / theta
+    adaptation) appears in core/engine.py and NOWHERE else."""
+    root = pathlib.Path(repro.__file__).parent
+    for rel in ("core/pdhg.py", "runtime/batch.py",
+                "distributed/pdhg_dist.py", "crossbar/solver.py"):
+        src = (root / rel).read_text()
+        assert "theta_k * (x - x_prev)" not in src, rel
+        assert "jnp.sqrt(1.0 + 2.0" not in src, rel
+    assert "jnp.sqrt(1.0 + 2.0" in (root / "core/engine.py").read_text()
+
+
+# ------------------------------------------------------------- launch ---
+
+def test_launch_solve_kernel_flag(x64, capsys):
+    """--kernel pallas runs green end-to-end on CPU (interpret mode)."""
+    from repro.launch.solve import main
+
+    res = main(["--instance", "rand:6x10", "--backend", "exact",
+                "--kernel", "pallas", "--max-iters", "2000",
+                "--tol", "1e-4"])
+    assert res.status == "optimal"
+    out = capsys.readouterr().out
+    assert "status=optimal" in out
+
+    results = main(["--backend", "batch", "--kernel", "pallas",
+                    "--instances", "rand:6x10,rand:8x12",
+                    "--max-iters", "2000", "--tol", "1e-4"])
+    assert all(r.converged for r in results)

@@ -1,0 +1,138 @@
+"""Benchmark guard: validate BENCH_stream.json and gate warm regressions.
+
+CI runs this right after the smoke stream benchmark:
+
+  1. **Schema validation** — the candidate record must be
+     ``bench_stream/v2``: every serving path (dense batched /
+     per-instance, crossbar batched / per-instance, sparse batched +
+     its densified baseline, async + sync dispatch) present with finite
+     numeric ``cold_s``/``warm_s``/``mvm_total``, plus the ``sparse``
+     host-memory summary.
+  2. **Regression gate** — the warm BUCKETED paths (the steady-state
+     serving numbers) must not regress more than ``--max-regression``
+     (default 2x) against the committed baseline
+     (``git show HEAD:BENCH_stream.json`` in CI).  A v1 baseline is
+     accepted: only the path keys both records share are compared.
+
+Exit code 0 = pass; 1 = schema or regression failure (messages on
+stderr).
+
+  python benchmarks/bench_guard.py --candidate BENCH_stream.json \
+      --baseline /tmp/bench_baseline.json --max-regression 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+SCHEMA = "bench_stream/v2"
+
+# every serving path a v2 record must carry
+REQUIRED_PATHS = (
+    "exact_batched",
+    "exact_per_instance",
+    "crossbar_batched",
+    "crossbar_per_instance",
+    "sparse_batched",
+    "sparse_batched_dense",
+    "exact_batched_async",
+    "exact_batched_sync",
+)
+PATH_FIELDS = ("cold_s", "warm_s", "mvm_total")
+SPARSE_FIELDS = ("density", "host_stack_bytes_dense",
+                 "host_stack_bytes_sparse", "host_mem_improvement",
+                 "speedup_warm")
+
+# warm steady-state serving paths gated against the committed baseline
+GUARDED_WARM_PATHS = ("exact_batched", "crossbar_batched", "sparse_batched")
+
+
+def _fail(msg: str) -> None:
+    print(f"bench_guard: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def _finite_number(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v)
+
+
+def validate_schema(bench: dict) -> None:
+    if bench.get("schema") != SCHEMA:
+        _fail(f"schema is {bench.get('schema')!r}, expected {SCHEMA!r}")
+    paths = bench.get("paths")
+    if not isinstance(paths, dict):
+        _fail("missing 'paths' object")
+    for name in REQUIRED_PATHS:
+        entry = paths.get(name)
+        if not isinstance(entry, dict):
+            _fail(f"missing path entry {name!r}")
+        for field in PATH_FIELDS:
+            if not _finite_number(entry.get(field)):
+                _fail(f"paths.{name}.{field} is not a finite number: "
+                      f"{entry.get(field)!r}")
+            if entry[field] < 0:
+                _fail(f"paths.{name}.{field} is negative: {entry[field]}")
+    sparse = bench.get("sparse")
+    if not isinstance(sparse, dict):
+        _fail("missing 'sparse' summary")
+    for field in SPARSE_FIELDS:
+        if not _finite_number(sparse.get(field)):
+            _fail(f"sparse.{field} is not a finite number: "
+                  f"{sparse.get(field)!r}")
+
+
+def check_regressions(candidate: dict, baseline: dict,
+                      max_regression: float) -> None:
+    base_paths = baseline.get("paths") or {}
+    compared = 0
+    for name in GUARDED_WARM_PATHS:
+        base = base_paths.get(name)
+        if not isinstance(base, dict):
+            continue        # v1 baselines predate the sparse/async paths
+        base_warm = base.get("warm_s")
+        cand_warm = candidate["paths"][name]["warm_s"]
+        if not _finite_number(base_warm) or base_warm <= 0:
+            continue
+        compared += 1
+        ratio = cand_warm / base_warm
+        status = "ok" if ratio <= max_regression else "REGRESSION"
+        print(f"bench_guard: {name}: warm {base_warm:.3f}s -> "
+              f"{cand_warm:.3f}s ({ratio:.2f}x) [{status}]")
+        if ratio > max_regression:
+            _fail(f"{name} warm path regressed {ratio:.2f}x "
+                  f"(> {max_regression}x allowed)")
+    if compared == 0:
+        print("bench_guard: no comparable warm paths in baseline "
+              "(schema migration?); regression gate skipped")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--candidate", default="BENCH_stream.json",
+                    help="freshly produced benchmark record")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline record (omit to skip the "
+                         "regression gate and only validate schema)")
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="max allowed warm-time ratio candidate/baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    validate_schema(candidate)
+    print(f"bench_guard: schema {SCHEMA} ok "
+          f"({len(candidate['paths'])} paths)")
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        check_regressions(candidate, baseline, args.max_regression)
+    print("bench_guard: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

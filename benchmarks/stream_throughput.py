@@ -20,8 +20,12 @@ Each timed path runs twice: COLD includes compilation, WARM is the
 steady-state serving cost (the number that matters for throughput).
 ``--kernel`` selects the engine's update backend (jnp vs fused Pallas).
 Besides the full record, every run emits ``BENCH_stream.json`` at the
-repo root (schema ``bench_stream/v1``: per-path warm/cold seconds +
-device-MVM totals) as the perf baseline for future PRs; CI uploads it.
+repo root (schema ``bench_stream/v2``: per-path warm/cold seconds +
+device-MVM totals, now including the sparse COO pipeline and the
+async-vs-sync dispatch split, plus a ``sparse`` summary of the host
+bytes each stacking path materialized) as the perf baseline for future
+PRs; CI uploads it and ``benchmarks/bench_guard.py`` gates regressions
+against it.
 """
 from __future__ import annotations
 
@@ -35,6 +39,10 @@ import numpy as np
 SMOKE_SHAPES = [(8, 14), (10, 18), (20, 34), (12, 24), (7, 13), (16, 28)]
 FULL_SHAPES = [(8, 14), (10, 18), (20, 34), (12, 24), (7, 13), (16, 28),
                (40, 70), (28, 52), (56, 96), (24, 44)]
+# the sparse stream: >=95%-sparse paper-class shapes (acceptance target)
+SPARSE_DENSITY = 0.05
+SPARSE_SMOKE_SHAPES = [(96, 192), (128, 256), (80, 160), (112, 224)]
+SPARSE_FULL_SHAPES = [(192, 384), (256, 512), (160, 320), (224, 448)]
 
 
 def build_stream(n_instances: int, shapes, seed: int = 0):
@@ -95,6 +103,91 @@ def bench_exact(lps, opts):
         "mvm_total_batched": int(sum(r.mvm_calls for r in results)),
         "mvm_total_per_instance": int(sum(r.mvm_calls
                                           for r in loop_results)),
+    }
+
+
+def bench_sparse(lps, opts):
+    """Sparse COO pipeline vs. the densified dense pipeline on the SAME
+    >=95%-sparse stream.
+
+    The dense baseline pads every instance into its (B, m_pad, n_pad)
+    bucket stack — exactly what serving sparse traffic without the
+    sparse path costs; ``host_stack_bytes`` records what each path
+    actually materialized on the host.
+    """
+    from repro.runtime import BatchSolver
+
+    dense_lps = [lp.densified() for lp in lps]
+
+    timings = {}
+    solver_d = BatchSolver(opts)
+    t0 = time.time(); dense_results = solver_d.solve_stream(dense_lps)
+    timings["dense_cold_s"] = time.time() - t0
+    t0 = time.time(); dense_results = solver_d.solve_stream(dense_lps)
+    timings["dense_warm_s"] = time.time() - t0
+    dense_stats = dict(solver_d.last_stream_stats)
+
+    solver_s = BatchSolver(opts)
+    t0 = time.time(); results = solver_s.solve_stream(lps)
+    timings["sparse_cold_s"] = time.time() - t0
+    t0 = time.time(); results = solver_s.solve_stream(lps)
+    timings["sparse_warm_s"] = time.time() - t0
+    sparse_stats = dict(solver_s.last_stream_stats)
+
+    gaps = [abs(r.obj - lp.obj_opt) / abs(lp.obj_opt)
+            for lp, r in zip(lps, results)]
+    mem_dense = dense_stats["dense_stack_bytes"]
+    mem_sparse = sparse_stats["sparse_stack_bytes"]
+    return {
+        **timings,
+        "speedup_warm": timings["dense_warm_s"]
+        / max(timings["sparse_warm_s"], 1e-12),
+        "density": float(np.mean([lp.K.density for lp in lps])),
+        "nnz_total": int(sum(lp.K.nnz for lp in lps)),
+        "host_stack_bytes_dense": int(mem_dense),
+        "host_stack_bytes_sparse": int(mem_sparse),
+        "host_mem_improvement": mem_dense / max(mem_sparse, 1),
+        "cache": solver_s.cache_info(),
+        "max_rel_gap": float(max(gaps)),
+        "max_rel_disagreement_vs_dense": float(max(
+            abs(r.obj - dr.obj) / max(abs(dr.obj), 1e-12)
+            for r, dr in zip(results, dense_results))),
+        "mvm_total_sparse": int(sum(r.mvm_calls for r in results)),
+        "mvm_total_dense": int(sum(r.mvm_calls for r in dense_results)),
+    }
+
+
+def bench_async(lps, opts):
+    """Submit-all-then-collect dispatch vs. blocking per-bucket serving
+    on the mixed-shape dense stream (same executables, same results —
+    the delta is pure dispatch overlap)."""
+    from repro.runtime import BatchSolver
+
+    timings = {}
+    sync = BatchSolver(opts, async_dispatch=False)
+    t0 = time.time(); sync.solve_stream(lps)
+    timings["sync_cold_s"] = time.time() - t0
+    t0 = time.time(); r_sync = sync.solve_stream(lps)
+    timings["sync_warm_s"] = time.time() - t0
+
+    al = BatchSolver(opts)          # async is the default
+    t0 = time.time(); al.solve_stream(lps)
+    timings["async_cold_s"] = time.time() - t0
+    t0 = time.time(); r_async = al.solve_stream(lps)
+    timings["async_warm_s"] = time.time() - t0
+
+    agree = max(abs(a.obj - s.obj) / max(abs(s.obj), 1e-12)
+                for a, s in zip(r_async, r_sync))
+    return {
+        **timings,
+        "speedup_warm": timings["sync_warm_s"]
+        / max(timings["async_warm_s"], 1e-12),
+        "dispatch_s": al.last_stream_stats["dispatch_s"],
+        "collect_s": al.last_stream_stats["collect_s"],
+        "n_buckets": al.last_stream_stats["n_buckets"],
+        "max_rel_disagreement_vs_sync": float(agree),
+        "mvm_total_async": int(sum(r.mvm_calls for r in r_async)),
+        "mvm_total_sync": int(sum(r.mvm_calls for r in r_sync)),
     }
 
 
@@ -186,10 +279,17 @@ def main(argv=None):
                        lanczos_iters=16 if args.smoke else 48,
                        seed=args.seed, kernel=args.kernel)
 
+    from repro.lp import sparse_lp_stream
+
     lps = build_stream(n, shapes, seed=args.seed)
+    sparse_shapes = SPARSE_SMOKE_SHAPES if args.smoke else SPARSE_FULL_SHAPES
+    sparse_lps = sparse_lp_stream(n, sparse_shapes, density=SPARSE_DENSITY,
+                                  seed=args.seed)
     record = {
         "config": {
             "n_instances": n, "shapes": [list(s) for s in shapes],
+            "sparse_shapes": [list(s) for s in sparse_shapes],
+            "sparse_density": SPARSE_DENSITY,
             "max_iters": max_iters, "tol": tol, "device": device.name,
             "tile": [device.crossbar_rows, device.crossbar_cols],
             "kernel": args.kernel,
@@ -198,6 +298,8 @@ def main(argv=None):
         },
         "exact": bench_exact(lps, opts),
         "crossbar": bench_device(lps, opts, device),
+        "sparse": bench_sparse(sparse_lps, opts),
+        "async": bench_async(lps, opts),
     }
 
     out = args.out or os.path.join(
@@ -210,19 +312,52 @@ def main(argv=None):
 
     # Compact perf-baseline record for future PRs: per-path warm/cold
     # seconds + device-MVM totals, written at the repo root so CI can
-    # upload it as a stable-named artifact next to the full record.
+    # upload it as a stable-named artifact next to the full record and
+    # ``bench_guard.py`` can gate schema + warm-path regressions on it.
     bench = {
-        "schema": "bench_stream/v1",
+        "schema": "bench_stream/v2",
         "kernel": args.kernel,
         "config": record["config"],
         "paths": {
-            f"{path}_{variant}": {
-                "cold_s": record[path][f"{variant}_cold_s"],
-                "warm_s": record[path][f"{variant}_warm_s"],
-                "mvm_total": record[path][f"mvm_total_{variant}"],
-            }
-            for path in ("exact", "crossbar")
-            for variant in ("batched", "per_instance")
+            **{
+                f"{path}_{variant}": {
+                    "cold_s": record[path][f"{variant}_cold_s"],
+                    "warm_s": record[path][f"{variant}_warm_s"],
+                    "mvm_total": record[path][f"mvm_total_{variant}"],
+                }
+                for path in ("exact", "crossbar")
+                for variant in ("batched", "per_instance")
+            },
+            "sparse_batched": {
+                "cold_s": record["sparse"]["sparse_cold_s"],
+                "warm_s": record["sparse"]["sparse_warm_s"],
+                "mvm_total": record["sparse"]["mvm_total_sparse"],
+            },
+            "sparse_batched_dense": {
+                "cold_s": record["sparse"]["dense_cold_s"],
+                "warm_s": record["sparse"]["dense_warm_s"],
+                "mvm_total": record["sparse"]["mvm_total_dense"],
+            },
+            "exact_batched_async": {
+                "cold_s": record["async"]["async_cold_s"],
+                "warm_s": record["async"]["async_warm_s"],
+                "mvm_total": record["async"]["mvm_total_async"],
+            },
+            "exact_batched_sync": {
+                "cold_s": record["async"]["sync_cold_s"],
+                "warm_s": record["async"]["sync_warm_s"],
+                "mvm_total": record["async"]["mvm_total_sync"],
+            },
+        },
+        "sparse": {
+            "density": record["sparse"]["density"],
+            "host_stack_bytes_dense":
+                record["sparse"]["host_stack_bytes_dense"],
+            "host_stack_bytes_sparse":
+                record["sparse"]["host_stack_bytes_sparse"],
+            "host_mem_improvement":
+                record["sparse"]["host_mem_improvement"],
+            "speedup_warm": record["sparse"]["speedup_warm"],
         },
     }
     bench_out = os.path.join(os.path.dirname(os.path.dirname(
@@ -237,6 +372,20 @@ def main(argv=None):
               f" | speedup {r['speedup_warm']:.2f}x"
               f" | max rel gap {r['max_rel_gap']:.2e}"
               f" | cache {r['cache']}")
+    r = record["sparse"]
+    print(f"[sparse] dense warm {r['dense_warm_s']:.3f}s"
+          f" | sparse warm {r['sparse_warm_s']:.3f}s"
+          f" | speedup {r['speedup_warm']:.2f}x"
+          f" | host stack {r['host_stack_bytes_dense']}B ->"
+          f" {r['host_stack_bytes_sparse']}B"
+          f" ({r['host_mem_improvement']:.1f}x smaller)"
+          f" | density {r['density']:.3f}")
+    r = record["async"]
+    print(f"[async] sync warm {r['sync_warm_s']:.3f}s"
+          f" | async warm {r['async_warm_s']:.3f}s"
+          f" | speedup {r['speedup_warm']:.2f}x"
+          f" | dispatch {r['dispatch_s']:.3f}s"
+          f" collect {r['collect_s']:.3f}s over {r['n_buckets']} buckets")
     led = record["crossbar"]["ledger_batched"]
     print(f"[crossbar] stream write={led['write_energy_j']:.3f}J "
           f"(padding {led['write_energy_padding_j']:.3f}J) "

@@ -15,11 +15,13 @@ solver path in the repo:
 Two orthogonal backend axes parameterize the engine:
 
   * **operator backend** (``Operator``): where the two device MVMs run —
-    dense ``jnp`` matmuls with optional multiplicative read noise, the
-    differential-pair Pallas crossbar kernel (``kernels.ops.crossbar_mvm``
-    against the single programmed symmetric block M), a shard_map
-    psum-tiled operator over a device mesh, or a host-side ``Accel``
-    handle (crossbar simulation with an energy ledger).
+    dense ``jnp`` matmuls with optional multiplicative read noise, sparse
+    BCOO/BCSR contractions over the stored nonzeros (same noise hooks;
+    the paper-scale sparse workload class), the differential-pair Pallas
+    crossbar kernel (``kernels.ops.crossbar_mvm`` against the single
+    programmed symmetric block M), a shard_map psum-tiled operator over
+    a device mesh, or a host-side ``Accel`` handle (crossbar simulation
+    with an energy ledger).
   * **update backend** (``Updates``): how the proximal vector algebra
     runs — reference ``jnp`` (one expression per update) or the fused
     Pallas kernels (``kernels.ops.primal_update`` / ``dual_update``, one
@@ -113,6 +115,37 @@ def dense_operator(K_fwd, K_adj, sigma_read: float = 0.0) -> Operator:
         return w
 
     return Operator(fwd, adj, "dense")
+
+
+def sparse_operator(K_sp, sigma_read: float = 0.0) -> Operator:
+    """Sparse jnp backend over a ``jax.experimental.sparse`` matrix
+    (BCOO or BCSR): the two MVMs contract only the stored nonzeros, so
+    paper-scale sparse LPs never materialize a dense K on device.  The
+    read-noise hook matches ``dense_operator`` exactly — a crossbar only
+    programs the nonzero conductances, and cycle-to-cycle noise rides on
+    the accumulated currents either way.
+
+    The adjoint is a transpose VIEW taken once at trace time (BCSR drops
+    to BCOO for it — BCSR has no native transpose); no index shuffling
+    happens inside the iteration.
+    """
+    from jax.experimental import sparse as jsparse  # deferred
+
+    K_adj = (K_sp.to_bcoo() if isinstance(K_sp, jsparse.BCSR) else K_sp).T
+
+    def fwd(v, key=None):
+        w = K_sp @ v
+        if sigma_read > 0.0:
+            w = _read_noise(w, key, sigma_read)
+        return w
+
+    def adj(v, key=None):
+        w = K_adj @ v
+        if sigma_read > 0.0:
+            w = _read_noise(w, key, sigma_read)
+        return w
+
+    return Operator(fwd, adj, "sparse")
 
 
 def accel_operator(accel) -> Operator:
@@ -335,7 +368,12 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
         xs = jnp.where(do_restart, jnp.zeros_like(xs), xs)
         ys = jnp.where(do_restart, jnp.zeros_like(ys), ys)
         cnt = jnp.where(do_restart, 0.0, cnt)
-        merit = jnp.minimum(merit, merit_avg)
+        # the carried merit must be the merit of the iterate actually
+        # CARRIED: min(merit, merit_avg) used to adopt the averaged
+        # iterate's (lower) merit even when the state kept the current
+        # iterate, so exits reported a residual the returned solution
+        # does not satisfy.
+        merit = jnp.where(use_avg, merit_avg, merit)
         return (state, it + check_every, merit, xs, ys, cnt, m_restart, rk)
 
     def cond(loop):
@@ -364,6 +402,9 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     ``operator`` swaps the MVM backend (e.g. the differential-pair
     crossbar kernel) in place of the default dense one; the step-size
     initialization, init draws, and option plumbing stay HERE either way.
+    ``K_fwd`` may be a ``jax.experimental.sparse`` matrix (BCOO/BCSR):
+    the default operator is then ``sparse_operator`` and ``K_adj`` is
+    ignored (the adjoint is a transpose view of the same nonzeros).
     """
     (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
      sigma_read, kernel) = static
@@ -372,7 +413,10 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     sigma0 = eta * omega / rho
     key, x0, y0 = draw_init(key, m, n, lb, ub, K_fwd.dtype)
     if operator is None:
-        operator = dense_operator(K_fwd, K_adj, sigma_read)
+        if hasattr(K_fwd, "todense"):   # JAXSparse (BCOO/BCSR), not ndarray
+            operator = sparse_operator(K_fwd, sigma_read)
+        else:
+            operator = dense_operator(K_fwd, K_adj, sigma_read)
     return pdhg_loop(
         operator, make_updates(kernel),
         b, c, lb, ub, T, Sigma, x0, y0, tau0, sigma0, key,

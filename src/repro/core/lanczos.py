@@ -108,22 +108,23 @@ def _tridiag(alphas, betas) -> np.ndarray:
     return T
 
 
-def lanczos_svd_jit(M: jnp.ndarray, k_max: int = 32, key=None) -> jnp.ndarray:
-    """Jitted fixed-iteration Lanczos on a dense symmetric M.
+def lanczos_svd_jit_mv(matvec, dim: int, dtype, k_max: int = 32,
+                       key=None) -> jnp.ndarray:
+    """Jitted fixed-iteration Lanczos on an arbitrary symmetric matvec.
 
-    Returns the largest |Ritz value| of the k_max-step tridiagonalization.
-    No early exit (fixed cost) — used inside jitted solver pipelines and
-    the distributed dry-run.
+    The operator enters only through ``matvec(v) -> M v`` — sparse
+    pipelines pass a BCOO/COO contraction over the symmetric block M
+    here and never build M densely.  Returns the largest |Ritz value| of
+    the k_max-step tridiagonalization; no early exit (fixed cost).
     """
-    dim = M.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
-    v0 = jax.random.normal(key, (dim,), dtype=M.dtype)
+    v0 = jax.random.normal(key, (dim,), dtype=dtype)
     v0 = v0 / jnp.linalg.norm(v0)
 
     def step(carry, _):
         v_prev, v, beta = carry
-        w = M @ v
+        w = matvec(v)
         w = w - beta * v_prev
         alpha = jnp.vdot(v, w)
         w = w - alpha * v
@@ -132,11 +133,22 @@ def lanczos_svd_jit(M: jnp.ndarray, k_max: int = 32, key=None) -> jnp.ndarray:
         return (v, v_next, beta_next), (alpha, beta_next)
 
     (_, _, _), (alphas, betas) = jax.lax.scan(
-        step, (jnp.zeros_like(v0), v0, jnp.asarray(0.0, M.dtype)),
+        step, (jnp.zeros_like(v0), v0, jnp.asarray(0.0, dtype)),
         None, length=k_max,
     )
     T = jnp.diag(alphas) + jnp.diag(betas[:-1], 1) + jnp.diag(betas[:-1], -1)
     return jnp.max(jnp.abs(jnp.linalg.eigvalsh(T)))
+
+
+def lanczos_svd_jit(M: jnp.ndarray, k_max: int = 32, key=None) -> jnp.ndarray:
+    """Jitted fixed-iteration Lanczos on a dense symmetric M.
+
+    Returns the largest |Ritz value| of the k_max-step tridiagonalization.
+    No early exit (fixed cost) — used inside jitted solver pipelines and
+    the distributed dry-run.
+    """
+    return lanczos_svd_jit_mv(lambda v: M @ v, M.shape[0], M.dtype,
+                              k_max=k_max, key=key)
 
 
 def power_iteration(

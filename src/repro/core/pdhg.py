@@ -92,10 +92,14 @@ def _project(x, lb, ub):
 
 
 def prepare(lp: StandardLP, opts: PDHGOptions):
-    """Step 0 of Algorithm 4: scaling, preconditioning (host)."""
+    """Step 0 of Algorithm 4: scaling, preconditioning (host).
+
+    Densifies a sparse K — the single-instance paths are dense; sparse
+    problems stream through ``runtime.batch``'s sparse pipeline instead.
+    """
     dt = opts.dtype
     scaled = precond_mod.apply_ruiz(
-        jnp.asarray(lp.K, dt), jnp.asarray(lp.b, dt), jnp.asarray(lp.c, dt),
+        jnp.asarray(lp.K_dense, dt), jnp.asarray(lp.b, dt), jnp.asarray(lp.c, dt),
         jnp.asarray(lp.lb, dt), jnp.asarray(lp.ub, dt),
         iters=opts.ruiz_iters,
     )

@@ -175,7 +175,13 @@ class CrossbarBatchSolver(BatchSolver):
     (bucket, batch, device) signature.  ``solve_stream`` returns
     ``CrossbarSolveReport`` objects (per-instance energy ledger included;
     residuals reported in ORIGINAL coordinates).
+
+    Sparse instances densify on entry (``supports_sparse = False``): a
+    crossbar programs every physical cell of its tiles regardless of the
+    operator's sparsity, so there is no memory to save device-side.
     """
+
+    supports_sparse = False
 
     def __init__(self, opts: PDHGOptions = PDHGOptions(), *,
                  device: DeviceModel = EPIRAM, mesh=None,

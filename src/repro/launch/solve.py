@@ -11,6 +11,9 @@
   PYTHONPATH=src python -m repro.launch.solve --backend batch \
       --device epiram --instances rand:8x14,rand:10x18,rand:24x40
       # device-tile-aware bucketed stream through the crossbar simulator
+  PYTHONPATH=src python -m repro.launch.solve --backend batch --sparse \
+      --instances sprand:96x192:0.05,sprand:128x256:0.02
+      # sparse COO stream: nonzero-proportional memory, async dispatch
 """
 from __future__ import annotations
 
@@ -29,9 +32,10 @@ from ..lp import (
     TABLE1_SIZES,
     pagerank_lp,
     random_standard_lp,
+    sparse_random_standard_lp,
     table1_instance,
 )
-from ..runtime import solve_stream
+from ..runtime import BatchSolver
 from ..runtime.mesh import make_local_mesh
 
 
@@ -41,6 +45,13 @@ def load_instance(spec: str, seed: int = 0):
     if spec.startswith("rand:"):
         m, n = spec[5:].split("x")
         return random_standard_lp(int(m), int(n), seed=seed)
+    if spec.startswith("sprand:"):
+        # sprand:MxN[:density] — COO-native sparse instance
+        parts = spec[7:].split(":")
+        m, n = parts[0].split("x")
+        density = float(parts[1]) if len(parts) > 1 else 0.05
+        return sparse_random_standard_lp(int(m), int(n), density=density,
+                                         seed=seed)
     if spec.startswith("pagerank:"):
         return pagerank_lp(int(spec.split(":")[1]), seed=seed)
     raise ValueError(f"unknown instance {spec!r}")
@@ -58,6 +69,16 @@ def main(argv=None):
                     choices=["none", "epiram", "taox"],
                     help="with --backend batch: serve the stream through "
                          "the device-tile-aware crossbar simulator")
+    ap.add_argument("--sparse", action="store_true",
+                    help="with --backend batch: serve the stream through "
+                         "the sparse COO pipeline (instances loaded as "
+                         "sprand: specs are sparse already; dense specs "
+                         "are converted).  Memory is proportional to "
+                         "nonzeros — no dense (B, m, n) stack exists")
+    ap.add_argument("--sync", action="store_true",
+                    help="with --backend batch: block per bucket instead "
+                         "of the default submit-all-then-collect async "
+                         "dispatch")
     ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
                     help="engine update backend: reference jnp vector "
                          "algebra or the fused Pallas kernels (interpret "
@@ -71,6 +92,12 @@ def main(argv=None):
     if args.device != "none" and args.backend != "batch":
         ap.error("--device only applies to --backend batch "
                  "(use --backend epiram/taox for single instances)")
+    if (args.sparse or args.sync) and args.backend != "batch":
+        ap.error("--sparse/--sync only apply to --backend batch")
+    if args.sparse and args.device != "none":
+        ap.error("--sparse does not combine with --device: a crossbar "
+                 "programs every physical cell, so device streams are "
+                 "served densely")
     if args.kernel != "jnp" and args.backend == "distributed":
         ap.error("--kernel pallas is not wired into the shard_map path "
                  "(the distributed engine runs the psum-tiled operator "
@@ -102,15 +129,26 @@ def main(argv=None):
                          f"read={led.read_energy_j:.4f}J")
                 print(line)
             return reports
-        results = solve_stream(lps, opts)
+        if args.sparse:
+            lps = [lp.sparsified() for lp in lps]
+        solver = BatchSolver(opts, async_dispatch=not args.sync)
+        results = solver.solve_stream(lps)
         for lp, r in zip(lps, results):
             line = (f"instance={r.name} shape={lp.K.shape} "
                     f"bucket={r.bucket} status={r.status} "
                     f"iters={r.iterations} objective={r.obj:.6f}")
+            if r.sparse:
+                line += f" sparse(nnz={lp.K.nnz})"
             if lp.obj_opt is not None:
                 rel = abs(r.obj - lp.obj_opt) / max(abs(lp.obj_opt), 1e-12)
                 line += f" (known optimum {lp.obj_opt:.6f}, rel err {rel:.2e})"
             print(line)
+        st = solver.last_stream_stats
+        print(f"stream: buckets={st['n_buckets']} "
+              f"dispatch={st['dispatch_s']:.3f}s "
+              f"collect={st['collect_s']:.3f}s "
+              f"host_stack_bytes=dense:{st['dense_stack_bytes']}"
+              f"/sparse:{st['sparse_stack_bytes']}")
         return results
 
     lp = load_instance(args.instance, seed=args.seed)

@@ -1,5 +1,5 @@
 """LP problem substrate: containers, generators, ground-truth simplex."""
-from .problem import INF, LPProblem, StandardLP, split_standard_solution
+from .problem import INF, LPProblem, SparseCOO, StandardLP, split_standard_solution
 from .generators import (
     TABLE1_SIZES,
     assignment_lp,
@@ -10,6 +10,9 @@ from .generators import (
     random_inequality_lp,
     random_inequality_lp_known,
     random_standard_lp,
+    sparse_lp_stream,
+    sparse_random_standard_lp,
+    SPARSE_STREAM_SHAPES,
     table1_instance,
 )
 from . import mps, simplex
@@ -17,6 +20,7 @@ from . import mps, simplex
 __all__ = [
     "INF",
     "LPProblem",
+    "SparseCOO",
     "StandardLP",
     "split_standard_solution",
     "TABLE1_SIZES",
@@ -28,6 +32,9 @@ __all__ = [
     "random_inequality_lp",
     "random_inequality_lp_known",
     "random_standard_lp",
+    "sparse_lp_stream",
+    "sparse_random_standard_lp",
+    "SPARSE_STREAM_SHAPES",
     "table1_instance",
     "simplex",
     "mps",

@@ -10,11 +10,11 @@ external solver).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from .problem import INF, LPProblem, StandardLP
+from .problem import INF, LPProblem, SparseCOO, StandardLP
 
 # (m, n) sizes from paper Table 1.  These drive the benchmark harness.
 TABLE1_SIZES: Dict[str, Tuple[int, int]] = {
@@ -73,6 +73,85 @@ def random_standard_lp(
         x_opt=x_opt,
         obj_opt=float(c @ x_opt),
     )
+
+
+def sparse_random_standard_lp(
+    m: int,
+    n: int,
+    density: float = 0.01,
+    seed: int = 0,
+    scale: float = 1.0,
+    dtype=np.float64,
+) -> StandardLP:
+    """Random sparse standard-form LP with a *known* optimal solution.
+
+    Same complementary-slackness construction as ``random_standard_lp``,
+    but K is built DIRECTLY in COO form — positions sampled without ever
+    allocating an (m, n) dense array, so paper-scale instances (millions
+    of variables at sub-percent density) fit in nonzero-proportional host
+    memory.  Coverage guarantee: at least one entry per row and per
+    column (no degenerate zero rows/cols).
+    """
+    assert n >= m, "standard-form generator needs n >= m"
+    assert 0.0 < density <= 1.0, density
+    rng = np.random.default_rng(seed)
+    # one guaranteed entry per row and per column ...
+    flat = [rng.integers(0, n, m) + np.arange(m) * n,
+            rng.integers(0, m, n) * n + np.arange(n)]
+    # ... plus the remaining budget sampled with replacement and deduped
+    # (collisions are rare at low density; exact nnz is not contractual)
+    target = int(round(density * m * n))
+    extra = max(target - m - n, 0)
+    if extra:
+        flat.append(rng.integers(0, m * n, extra))
+    flat = np.unique(np.concatenate(flat))
+    row, col = np.divmod(flat, n)
+    data = (rng.normal(size=flat.size) * scale).astype(dtype)
+    K = SparseCOO(data, row, col, (m, n))
+    n_basic = min(m, n)
+    basic = rng.choice(n, size=n_basic, replace=False)
+    x_opt = np.zeros(n, dtype)
+    x_opt[basic] = rng.uniform(0.5, 2.0, size=n_basic)
+    b = K @ x_opt
+    y_opt = rng.normal(size=m).astype(dtype)
+    s = rng.uniform(0.1, 1.0, size=n).astype(dtype)
+    s[basic] = 0.0
+    c = (K.T @ y_opt) + s
+    return StandardLP(
+        c=c,
+        K=K,
+        b=b,
+        lb=np.zeros(n, dtype),
+        ub=np.full(n, INF, dtype),
+        name=f"sprand-{m}x{n}-d{density:g}-s{seed}",
+        x_opt=x_opt,
+        obj_opt=float(c @ x_opt),
+    )
+
+
+# Paper-scale shapes for sparse stream serving: MIPLIB-2017-class LP
+# relaxations run 1e4-1e6 nonzeros at fractions-of-a-percent density;
+# these are the bucketable stand-ins the benchmarks cycle through.
+SPARSE_STREAM_SHAPES: Tuple[Tuple[int, int], ...] = (
+    (96, 192), (128, 256), (80, 160), (112, 224))
+
+
+def sparse_lp_stream(
+    n_instances: int,
+    shapes: Sequence[Tuple[int, int]] = SPARSE_STREAM_SHAPES,
+    density: float = 0.05,
+    seed: int = 0,
+    dtype=np.float64,
+) -> List[StandardLP]:
+    """A mixed-shape stream of sparse LPs at paper-scale densities (all
+    with known optima), cycling through ``shapes`` — the sparse twin of
+    the dense streams the throughput benchmark builds."""
+    lps = []
+    for i in range(n_instances):
+        m, n = shapes[i % len(shapes)]
+        lps.append(sparse_random_standard_lp(
+            m, n, density=density, seed=seed + i, dtype=dtype))
+    return lps
 
 
 def table1_instance(name: str, seed: int = 0) -> StandardLP:

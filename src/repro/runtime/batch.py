@@ -24,25 +24,48 @@ and must be served together.  Same-shape stacking (the old
 Every instance gets its own PRNG key (derived from ``opts.seed`` and its
 position in the stream), so iterate initialization and read-noise streams
 are decorrelated across a bucket.
+
+Past toy sizes, two more concerns take over (ROADMAP item 2):
+
+  * **Sparse streams.**  A ``StandardLP`` whose K is a ``SparseCOO``
+    routes through a dedicated sparse bucket pipeline: nonzeros are
+    padded to an nnz bucket and stacked as (B, nnz) data + (B, nnz, 2)
+    index arrays — never a dense (B, m_pad, n_pad) stack — and the
+    engine runs ``sparse_operator`` (BCOO contractions) with sparse Ruiz
+    equilibration, Pock–Chambolle diagonals and a matvec-only Lanczos.
+  * **Async serving.**  ``solve_stream`` submits EVERY bucket to its
+    compiled executable first (JAX dispatch is asynchronous; the host
+    never blocks between buckets) and only then collects results,
+    preferring buckets whose device buffers are already ready.  Large
+    buckets donate their stacked operator buffer to the executable
+    (``jax.jit(..., donate_argnums=...)``) on backends that support
+    donation, so peak device memory stays ~one bucket-stack.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import sparse as jsparse
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..core import engine
+from ..core.lanczos import lanczos_svd_jit_mv
 from ..core.pdhg import PDHGOptions
 from ..core.pdhg import opts_static  # noqa: F401  (canonical home; re-export)
-from ..lp.problem import StandardLP
+from ..lp.problem import SparseCOO, StandardLP
 
 MIN_BUCKET = 8
+MIN_NNZ_BUCKET = 16
+# donate the stacked operator buffer to the executable past this size
+# (on backends that implement donation; CPU silently ignores it)
+DONATE_MIN_BYTES = 32 << 20
 
 
 # ------------------------------------------------------------- bucketing ---
@@ -67,28 +90,41 @@ def bucket_dims(m: int, n: int, min_size: int = MIN_BUCKET,
     return up(m), up(n)
 
 
+def nnz_bucket(nnz: int, min_size: int = MIN_NNZ_BUCKET) -> int:
+    """Round a nonzero count up to its power-of-two bucket (so repeat
+    sparse traffic with drifting nnz reuses compiled executables)."""
+    return max(min_size, 1 << (max(int(nnz), 1) - 1).bit_length())
+
+
 def pad_problem(lp: StandardLP, m_pad: int, n_pad: int) -> StandardLP:
     """Embed ``lp`` in an (m_pad, n_pad) problem with identical optimum.
 
     Extra variables are pinned (lb=ub=0, c=0); extra rows are zero with
     b=0.  Any solution of the padded problem restricts to one of the
-    original and vice versa.
+    original and vice versa.  Padding is dtype-preserving (an f32 stream
+    pads in f32 — the old ``np.zeros`` default doubled host memory) and
+    sparse-preserving (a SparseCOO K just grows its logical shape; the
+    nonzeros are never densified).
     """
     m, n = lp.K.shape
     assert m_pad >= m and n_pad >= n, ((m, n), (m_pad, n_pad))
-    K = np.zeros((m_pad, n_pad))
-    K[:m, :n] = lp.K
-    b = np.zeros(m_pad)
+    dt = lp.K.dtype
+    if isinstance(lp.K, SparseCOO):
+        K = lp.K.with_shape(m_pad, n_pad)
+    else:
+        K = np.zeros((m_pad, n_pad), dt)
+        K[:m, :n] = lp.K
+    b = np.zeros(m_pad, dt)
     b[:m] = lp.b
-    c = np.zeros(n_pad)
+    c = np.zeros(n_pad, dt)
     c[:n] = lp.c
-    lb = np.zeros(n_pad)
-    ub = np.zeros(n_pad)
+    lb = np.zeros(n_pad, dt)
+    ub = np.zeros(n_pad, dt)
     lb[:n] = lp.lb
     ub[:n] = lp.ub
     x_opt = None
     if lp.x_opt is not None:
-        x_opt = np.zeros(n_pad)
+        x_opt = np.zeros(n_pad, np.asarray(lp.x_opt).dtype)
         x_opt[:n] = lp.x_opt
     return StandardLP(c=c, K=K, b=b, lb=lb, ub=ub, name=lp.name,
                       x_opt=x_opt, obj_opt=lp.obj_opt)
@@ -96,17 +132,59 @@ def pad_problem(lp: StandardLP, m_pad: int, n_pad: int) -> StandardLP:
 
 def stack_problems(lps: Sequence[StandardLP], m: Optional[int] = None,
                    n: Optional[int] = None) -> tuple:
-    """Pad a list of StandardLPs to a common shape and stack.
+    """Pad a list of StandardLPs to a common shape and DENSE-stack.
 
     Target dims default to the max over the list (the legacy
     ``distributed.batch_solve`` behaviour); buckets pass them explicitly.
+    Sparse members are densified — sparse streams should go through
+    ``stack_problems_sparse`` instead, which never materializes
+    (B, m, n).
     """
+    lps = [lp.densified() for lp in lps]
     m = m if m is not None else max(lp.K.shape[0] for lp in lps)
     n = n if n is not None else max(lp.K.shape[1] for lp in lps)
     padded = [pad_problem(lp, m, n) for lp in lps]
     return tuple(
         np.stack([getattr(p, f) for p in padded])
         for f in ("K", "b", "c", "lb", "ub"))
+
+
+def stack_problems_sparse(lps: Sequence[StandardLP],
+                          m: Optional[int] = None,
+                          n: Optional[int] = None,
+                          nnz: Optional[int] = None) -> tuple:
+    """Stack sparse StandardLPs WITHOUT densifying K.
+
+    Returns ``(data (B, nnz), idx (B, nnz, 2) int32, b, c, lb, ub)``.
+    Shape padding is purely logical (zero rows / pinned variables, as in
+    ``pad_problem``); nnz padding appends explicit zero entries at
+    (0, 0), which contribute nothing to any contraction or scaling.
+    """
+    assert lps and all(isinstance(lp.K, SparseCOO) for lp in lps), \
+        "stack_problems_sparse needs SparseCOO operators"
+    m = m if m is not None else max(lp.K.shape[0] for lp in lps)
+    n = n if n is not None else max(lp.K.shape[1] for lp in lps)
+    nnz = nnz if nnz is not None else max(lp.K.nnz for lp in lps)
+    B = len(lps)
+    dt = lps[0].K.dtype
+    data = np.zeros((B, nnz), dt)
+    idx = np.zeros((B, nnz, 2), np.int32)
+    vecs = {f: np.zeros((B, dim), dt)
+            for f, dim in (("b", m), ("c", n), ("lb", n), ("ub", n))}
+    for k, lp in enumerate(lps):
+        # coalesce duplicates: the pipeline's scatter preconditioners
+        # reduce over stored entries, so parity with the densified
+        # problem requires one entry per (row, col)
+        K = lp.K.coalesce()
+        assert K.shape[0] <= m and K.shape[1] <= n and K.nnz <= nnz, \
+            (K.shape, K.nnz, (m, n, nnz))
+        data[k, :K.nnz] = K.data
+        idx[k, :K.nnz, 0] = K.row
+        idx[k, :K.nnz, 1] = K.col
+        for f, arr in vecs.items():
+            v = getattr(lp, f)
+            arr[k, :v.shape[0]] = v
+    return (data, idx, vecs["b"], vecs["c"], vecs["lb"], vecs["ub"])
 
 
 # -------------------------------------------------------------- pipeline ---
@@ -176,6 +254,92 @@ def make_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
     return pipeline
 
 
+# ------------------------------------------------------- sparse pipeline ---
+
+def _coo_matvec(data, row, col, v, out_dim: int):
+    """COO contraction ``out[row] += data * v[col]`` (scatter-add); the
+    sparse twin of one dense MVM, vmappable and while_loop-safe."""
+    return jnp.zeros(out_dim, v.dtype).at[row].add(data * v[col])
+
+
+def _prep_one_sparse(data, idx, b, c, lb, ub, opts: PDHGOptions):
+    """Sparse Ruiz + Pock–Chambolle diagonals on COO nonzeros.
+
+    Mirrors ``precondition.apply_ruiz`` / ``diagonal_precondition``
+    exactly (same eps, same sqrt-of-inf-norm update), but every row/col
+    reduction is a scatter over the stored entries — padded zero entries
+    at (0, 0) contribute nothing.  Returns the scaled nonzeros plus the
+    same tuple layout as the dense ``prep_scale``.
+    """
+    dt = data.dtype
+    m, n = b.shape[0], c.shape[0]
+    row, col = idx[:, 0], idx[:, 1]
+    eps = 1e-12
+    D1 = jnp.ones(m, dt)
+    D2 = jnp.ones(n, dt)
+    d = data
+    for _ in range(opts.ruiz_iters):
+        ad = jnp.abs(d)
+        r = jnp.sqrt(jnp.zeros(m, dt).at[row].max(ad))
+        cc = jnp.sqrt(jnp.zeros(n, dt).at[col].max(ad))
+        r = jnp.where(r < eps, 1.0, r)
+        cc = jnp.where(cc < eps, 1.0, cc)
+        D1 = D1 / r
+        D2 = D2 / cc
+        d = data * D1[row] * D2[col]
+    bs = D1 * b
+    cs = D2 * c
+    lbs = jnp.where(jnp.isfinite(lb), lb / D2, lb)
+    ubs = jnp.where(jnp.isfinite(ub), ub / D2, ub)
+    ad = jnp.abs(d)
+    T = 1.0 / jnp.maximum(jnp.zeros(n, dt).at[col].add(ad), eps)
+    Sigma = 1.0 / jnp.maximum(jnp.zeros(m, dt).at[row].add(ad), eps)
+    return d, bs, cs, lbs, ubs, T, Sigma, D1, D2
+
+
+def make_sparse_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
+    """vmapped sparse prep + solve over a stacked COO bucket.
+
+    Inputs are the ``stack_problems_sparse`` layout: (B, nnz) data,
+    (B, nnz, 2) indices, plus the dense vectors and per-instance keys.
+    The operator-norm estimate runs a matvec-only Lanczos on the
+    symmetric block of Sigma^{1/2} K T^{1/2} (two COO contractions per
+    iteration); the solve itself mounts ``engine.sparse_operator`` on a
+    BCOO built from the scaled nonzeros.  No dense (m, n) array ever
+    exists on host or device.
+    """
+    static = opts_static(opts, sigma_read)
+
+    def one(kd, ki, b, c, lb, ub, key):
+        m, n = b.shape[0], c.shape[0]
+        (d, bs, cs, lbs, ubs, T, Sigma, D1, D2) = _prep_one_sparse(
+            kd, ki, b, c, lb, ub, opts)
+        if opts.norm_override is not None:
+            rho = jnp.asarray(opts.norm_override, kd.dtype)
+        else:
+            row, col = ki[:, 0], ki[:, 1]
+            deff = d * jnp.sqrt(Sigma)[row] * jnp.sqrt(T)[col]
+
+            def mv(v):         # symmetric block M' of Keff, matvec-only
+                top = _coo_matvec(deff, row, col, v[m:], m)
+                bot = _coo_matvec(deff, col, row, v[:m], n)
+                return jnp.concatenate([top, bot])
+
+            rho = engine.lemma2_margin(
+                lanczos_svd_jit_mv(mv, m + n, kd.dtype,
+                                   k_max=opts.lanczos_iters),
+                sigma_read)
+        K_sp = jsparse.BCOO((d, ki), shape=(m, n))
+        x, y, it, merit = engine.solve_core(
+            K_sp, None, bs, cs, lbs, ubs, T, Sigma, rho, key, static)
+        return D2 * x, D1 * y, it, merit
+
+    def pipeline(Kdata, Kidx, bs, cs, lbs, ubs, keys):
+        return jax.vmap(one)(Kdata, Kidx, bs, cs, lbs, ubs, keys)
+
+    return pipeline
+
+
 # ------------------------------------------------------------- scheduler ---
 
 @dataclasses.dataclass
@@ -191,10 +355,28 @@ class BatchItemResult:
     converged: bool
     bucket: Tuple[int, int]
     mvm_calls: int = 0          # device MVMs (engine.mvm_accounting)
+    sparse: bool = False        # served by the sparse (COO) pipeline
 
     @property
     def status(self) -> str:
         return "optimal" if self.converged else "iteration_limit"
+
+
+def _donation_supported() -> bool:
+    """Buffer donation is a no-op on CPU; only claim it where XLA
+    implements it (keeps executable cache keys stable per platform)."""
+    try:
+        return jax.local_devices()[0].platform in ("gpu", "cuda", "rocm",
+                                                   "tpu")
+    except Exception:                      # pragma: no cover - no devices
+        return False
+
+
+def _outputs_ready(out) -> bool:
+    """True when every device buffer of a dispatched result is ready
+    (computation finished) — drives completion-order collection."""
+    return all(leaf.is_ready() for leaf in jax.tree_util.tree_leaves(out)
+               if hasattr(leaf, "is_ready"))
 
 
 class BatchSolver:
@@ -214,14 +396,29 @@ class BatchSolver:
     (``crossbar.solver.CrossbarBatchSolver``) override
     ``_make_pipeline``/``_collect``/``_device_signature`` to run full
     device physics in the same bucketed harness.
+
+    Sparse instances (``lp.is_sparse``) are bucketed separately (shape
+    bucket + power-of-two nnz bucket) and served by the COO pipeline
+    when the solver ``supports_sparse`` (the crossbar subclass programs
+    every physical cell, so it densifies instead).  ``async_dispatch``
+    submits all buckets before collecting any result (set False for
+    blocking per-bucket dispatch, e.g. to bound device memory on tiny
+    hosts); ``donate_min_bytes`` is the stacked-operator size beyond
+    which the input buffer is donated to the executable.
+    ``last_stream_stats`` records, per ``solve_stream`` call, the host
+    bytes each stacking path materialized plus dispatch/collect timings.
     """
+
+    supports_sparse = True
 
     def __init__(self, opts: PDHGOptions = PDHGOptions(), *,
                  mesh=None, batch_axes: Tuple[str, ...] = ("data",),
                  min_bucket: int = MIN_BUCKET,
                  sigma_read: float = 0.0,
                  tile: Optional[Tuple[int, int]] = None,
-                 kernel: Optional[str] = None):
+                 kernel: Optional[str] = None,
+                 async_dispatch: bool = True,
+                 donate_min_bytes: int = DONATE_MIN_BYTES):
         if kernel is not None:
             # convenience override; the kernel choice rides in opts and
             # therefore in every executable cache signature
@@ -232,9 +429,12 @@ class BatchSolver:
         self.min_bucket = min_bucket
         self.sigma_read = float(sigma_read)
         self.tile = None if tile is None else (int(tile[0]), int(tile[1]))
+        self.async_dispatch = bool(async_dispatch)
+        self.donate_min_bytes = int(donate_min_bytes)
         self._cache = {}
         self.cache_hits = 0
         self.cache_misses = 0
+        self.last_stream_stats: dict = {}
 
     # -- subclass hooks -----------------------------------------------
 
@@ -243,6 +443,9 @@ class BatchSolver:
 
     def _make_pipeline(self):
         return make_bucket_pipeline(self.opts, self.sigma_read)
+
+    def _make_sparse_pipeline(self):
+        return make_sparse_bucket_pipeline(self.opts, self.sigma_read)
 
     def _device_signature(self):
         """Hashable device component of the executable cache key."""
@@ -264,33 +467,55 @@ class BatchSolver:
             return None
         return NamedSharding(self.mesh, P(self.batch_axes))
 
-    def _executable(self, mb: int, nb: int, B: int, dtype):
-        key = (mb, nb, B, jnp.dtype(dtype).name,
-               opts_static(self.opts, self.sigma_read),
-               # prep-stage options that shape the pipeline but live
-               # outside the solve-core static tuple
-               (self.opts.ruiz_iters, self.opts.lanczos_iters,
-                self.opts.norm_override),
-               self.tile,
-               self._device_signature(),
-               None if self.mesh is None else
-               (tuple(self.mesh.axis_names),
-                tuple(self.mesh.devices.shape), self.batch_axes))
+    def _cache_key(self, shape_sig, B: int, dtype, donate: bool):
+        return (shape_sig, B, jnp.dtype(dtype).name, bool(donate),
+                opts_static(self.opts, self.sigma_read),
+                # prep-stage options that shape the pipeline but live
+                # outside the solve-core static tuple
+                (self.opts.ruiz_iters, self.opts.lanczos_iters,
+                 self.opts.norm_override),
+                self.tile,
+                self._device_signature(),
+                None if self.mesh is None else
+                (tuple(self.mesh.axis_names),
+                 tuple(self.mesh.devices.shape), self.batch_axes))
+
+    def _compile(self, key, pipeline, args, donate: bool):
         hit = self._cache.get(key)
         if hit is not None:
             self.cache_hits += 1
             return hit
         self.cache_misses += 1
-        sh = self._sharding()
-        sds = lambda s, dt: jax.ShapeDtypeStruct(  # noqa: E731
-            (B, *s), dt, sharding=sh)
-        k0 = jax.random.PRNGKey(0)
-        args = (sds((mb, nb), dtype), sds((mb,), dtype), sds((nb,), dtype),
-                sds((nb,), dtype), sds((nb,), dtype),
-                sds(k0.shape, k0.dtype))
-        compiled = jax.jit(self._make_pipeline()).lower(*args).compile()
+        donate_argnums = (0,) if donate else ()
+        compiled = jax.jit(pipeline, donate_argnums=donate_argnums) \
+            .lower(*args).compile()
         self._cache[key] = compiled
         return compiled
+
+    def _sds(self, shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt, sharding=self._sharding())
+
+    def _executable(self, mb: int, nb: int, B: int, dtype, *,
+                    donate: bool = False):
+        key = self._cache_key(("dense", mb, nb), B, dtype, donate)
+        k0 = jax.random.PRNGKey(0)
+        args = (self._sds((B, mb, nb), dtype), self._sds((B, mb), dtype),
+                self._sds((B, nb), dtype), self._sds((B, nb), dtype),
+                self._sds((B, nb), dtype), self._sds((B, *k0.shape),
+                                                     k0.dtype))
+        return self._compile(key, self._make_pipeline(), args, donate)
+
+    def _executable_sparse(self, mb: int, nb: int, nnz: int, B: int,
+                           dtype, *, donate: bool = False):
+        key = self._cache_key(("sparse", mb, nb, nnz), B, dtype, donate)
+        k0 = jax.random.PRNGKey(0)
+        args = (self._sds((B, nnz), dtype),
+                self._sds((B, nnz, 2), jnp.int32),
+                self._sds((B, mb), dtype), self._sds((B, nb), dtype),
+                self._sds((B, nb), dtype), self._sds((B, nb), dtype),
+                self._sds((B, *k0.shape), k0.dtype))
+        return self._compile(key, self._make_sparse_pipeline(), args,
+                             donate)
 
     def cache_info(self) -> dict:
         return {"hits": self.cache_hits, "misses": self.cache_misses,
@@ -328,31 +553,99 @@ class BatchSolver:
                 bucket=bucket,
                 mvm_calls=engine.mvm_accounting(
                     it, self.opts.check_every, lanczos),
+                sparse=bool(getattr(lp, "is_sparse", False)),
             )
 
+    def _donate(self, nbytes: int) -> bool:
+        return nbytes >= self.donate_min_bytes and _donation_supported()
+
+    def _dispatch_bucket(self, group, idxs, n_total: int,
+                         mb: int, nb: int, nnz: Optional[int], dtype,
+                         stats):
+        """Stack one bucket and submit it to its compiled executable.
+
+        ``nnz`` is the group's nonzero bucket (None = dense serving).
+        Returns the (asynchronously dispatched) device outputs — the
+        call never blocks on the solve itself.
+        """
+        B = self._padded_batch(len(group))
+        # batch padding repeats the first instance; extras are dropped
+        filler = [group[0]] * (B - len(group))
+        keys = self._instance_keys(idxs, n_total, B)
+        if nnz is not None:
+            stacked = stack_problems_sparse(group + filler, m=mb, n=nb,
+                                            nnz=nnz)
+            stats["sparse_stack_bytes"] += sum(a.nbytes for a in stacked)
+            arrays = ([jnp.asarray(stacked[0], dtype),
+                       jnp.asarray(stacked[1], jnp.int32)]
+                      + [jnp.asarray(a, dtype) for a in stacked[2:]])
+            donate = self._donate(arrays[0].nbytes)
+            exe = self._executable_sparse(mb, nb, nnz, B, dtype,
+                                          donate=donate)
+        else:
+            group = [lp.densified() for lp in group]
+            filler = [group[0]] * (B - len(group))
+            stacked = stack_problems(group + filler, m=mb, n=nb)
+            stats["dense_stack_bytes"] += sum(a.nbytes for a in stacked)
+            arrays = [jnp.asarray(a, dtype) for a in stacked]
+            donate = self._donate(arrays[0].nbytes)
+            exe = self._executable(mb, nb, B, dtype, donate=donate)
+        stats["donated_buckets"] += int(donate)
+        sh = self._sharding()
+        if sh is not None:
+            arrays = [jax.device_put(a, sh) for a in arrays]
+            keys = jax.device_put(keys, sh)
+        return exe(*arrays, keys)
+
     def solve_stream(self, lps: Sequence[StandardLP]) -> List[BatchItemResult]:
-        """Solve a heterogeneous stream; results come back in input order."""
+        """Solve a heterogeneous stream; results come back in input order.
+
+        Dispatch-then-collect: every bucket is stacked and submitted to
+        its compiled executable before ANY result is pulled back (JAX
+        dispatch is asynchronous, so device work overlaps host stacking
+        of later buckets), then results are collected preferring buckets
+        whose buffers are already ready.  ``async_dispatch=False``
+        restores blocking per-bucket serving.
+        """
         lps = list(lps)
         dtype = jnp.dtype(self.opts.dtype)
         buckets = {}
         for i, lp in enumerate(lps):
-            buckets.setdefault(self._bucket(*lp.K.shape), []).append(i)
+            sp = bool(getattr(lp, "is_sparse", False)) and \
+                self.supports_sparse
+            # sparse instances bucket on nnz too, so one nonzero-count
+            # outlier never inflates (and never recompiles) the whole
+            # shape bucket's stack
+            nz = nnz_bucket(lp.K.nnz) if sp else None
+            buckets.setdefault((self._bucket(*lp.K.shape), nz),
+                               []).append(i)
 
         results: List[Optional[object]] = [None] * len(lps)
-        for (mb, nb), idxs in buckets.items():
+        stats = {"n_buckets": len(buckets), "dense_stack_bytes": 0,
+                 "sparse_stack_bytes": 0, "donated_buckets": 0,
+                 "dispatch_s": 0.0, "collect_s": 0.0}
+        t0 = time.perf_counter()
+        pending = []
+        for ((mb, nb), nz), idxs in buckets.items():
             group = [lps[i] for i in idxs]
-            B = self._padded_batch(len(group))
-            # batch padding repeats the first instance; extras are dropped
-            filler = [group[0]] * (B - len(group))
-            stacked = stack_problems(group + filler, m=mb, n=nb)
-            arrays = [jnp.asarray(a, dtype) for a in stacked]
-            keys = self._instance_keys(idxs, len(lps), B)
-            sh = self._sharding()
-            if sh is not None:
-                arrays = [jax.device_put(a, sh) for a in arrays]
-                keys = jax.device_put(keys, sh)
-            out = self._executable(mb, nb, B, dtype)(*arrays, keys)
-            self._collect(out, (mb, nb), idxs, lps, results)
+            out = self._dispatch_bucket(group, idxs, len(lps), mb, nb, nz,
+                                        dtype, stats)
+            if self.async_dispatch:
+                pending.append((out, (mb, nb), idxs))
+            else:
+                jax.block_until_ready(out)
+                self._collect(out, (mb, nb), idxs, lps, results)
+        stats["dispatch_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        while pending:
+            # completion order: prefer a bucket whose buffers are ready;
+            # fall back to the oldest submission (blocking on it).
+            nxt = next((p for p in pending if _outputs_ready(p[0])),
+                       pending[0])
+            pending.remove(nxt)
+            self._collect(nxt[0], nxt[1], nxt[2], lps, results)
+        stats["collect_s"] = time.perf_counter() - t0
+        self.last_stream_stats = stats
         return results  # type: ignore[return-value]
 
 

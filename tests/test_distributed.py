@@ -36,6 +36,37 @@ def test_solve_dist_single_device_mesh(x64):
     assert abs(r.obj - lp.obj_opt) / abs(lp.obj_opt) < 1e-4
 
 
+def test_solve_dist_residual_components_are_real(x64):
+    """Regression (ISSUE 4): ``solve_dist`` used to stuff the scalar
+    in-loop merit into all four ``KKTResiduals`` fields, so
+    ``residuals.as_dict()`` reported r_pri == r_dual == r_iter == r_gap.
+    The components must now be the actual per-component KKT residuals of
+    the unscaled solution — matching a dense ``kkt_residuals``
+    evaluation on the same (x, y)."""
+    from repro.core.residuals import kkt_residuals
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lp = random_standard_lp(10, 18, seed=0)
+    opts = PDHGOptions(max_iters=20000, tol=1e-6, check_every=64)
+    r = solve_dist(lp, mesh, opts)
+    got = r.residuals.as_dict()
+    # four genuinely distinct components (the old bug made them equal)
+    assert len({f"{v:.12e}" for v in got.values()}) > 1, got
+    import jax.numpy as jnp
+    want = kkt_residuals(
+        jnp.asarray(r.x), jnp.asarray(r.x), jnp.asarray(r.y),
+        jnp.asarray(lp.c), jnp.asarray(lp.b),
+        jnp.asarray(lp.K @ r.x), jnp.asarray(lp.K.T @ r.y),
+        lb=jnp.asarray(lp.lb), ub=jnp.asarray(lp.ub)).as_dict()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-12,
+                                   err_msg=k)
+    # the in-loop merit still drives status, and the post-hoc noiseless
+    # residuals must corroborate the claimed convergence
+    assert r.status == "optimal"
+    assert float(r.residuals.max) < 10 * opts.tol
+
+
 def test_batch_solve(x64):
     mesh = make_mesh((1,), ("data",))
     lps = [random_standard_lp(8, 14, seed=s) for s in range(3)]

@@ -83,6 +83,67 @@ def test_engine_backends_identical_iterates(x64):
     assert not np.allclose(np.asarray(xs[1]), np.asarray(x_jit))
 
 
+def test_pdhg_loop_reports_merit_of_returned_iterate(x64):
+    """Regression (ISSUE 4): the check block used to carry
+    ``min(merit, merit_avg)``, adopting the AVERAGED iterate's merit even
+    when ``use_avg`` was False — so a stream whose averaged merit dips
+    below the current iterate's (without being adopted) exited reporting
+    a residual the returned solution does not satisfy, and every jitted
+    path derived ``converged``/``status`` from that lie.
+
+    The contrived residual_fn below distinguishes the two evaluations
+    structurally (the averaged check passes x_prev == x): the averaged
+    merit (0.5) dips below the current one (2.0) but stays above tol
+    with restarts disabled, so the average is never adopted — the loop
+    must report 2.0, the merit of the iterate it actually returns.
+    """
+    _, scaled, T, Sigma, rho = _prepped(seed=3)
+    m, n = scaled.K.shape
+    op = engine.dense_operator(scaled.K, scaled.K.T)
+    key, x0, y0 = engine.draw_init(jax.random.PRNGKey(0), m, n,
+                                   scaled.lb, scaled.ub, scaled.K.dtype)
+
+    def residual_fn(x, x_prev, y, Kx, KTy):
+        is_avg = jnp.all(x == x_prev)
+        return jnp.where(is_avg, jnp.asarray(0.5, x.dtype),
+                         jnp.asarray(2.0, x.dtype))
+
+    x, y, it, merit = engine.pdhg_loop(
+        op, engine.JNP_UPDATES, scaled.b, scaled.c, scaled.lb, scaled.ub,
+        T, Sigma, x0, y0, 0.95 / rho, 0.95 / rho, key,
+        max_iters=8, tol=0.1, gamma=0.0, check_every=8,
+        restart_beta=0.0, residual_fn=residual_fn)
+    assert int(it) == 8
+    # the returned iterate's merit, NOT the (lower) unadopted average's
+    assert float(merit) == 2.0
+    assert not float(merit) <= 0.1          # must not claim convergence
+
+
+def test_pdhg_loop_adopted_average_reports_average_merit(x64):
+    """Counterpart: when the averaged iterate IS adopted (its merit
+    beats tol), the reported merit must be the average's — the returned
+    vector satisfies it."""
+    _, scaled, T, Sigma, rho = _prepped(seed=3)
+    m, n = scaled.K.shape
+    op = engine.dense_operator(scaled.K, scaled.K.T)
+    key, x0, y0 = engine.draw_init(jax.random.PRNGKey(0), m, n,
+                                   scaled.lb, scaled.ub, scaled.K.dtype)
+
+    def residual_fn(x, x_prev, y, Kx, KTy):
+        is_avg = jnp.all(x == x_prev)
+        return jnp.where(is_avg, jnp.asarray(0.05, x.dtype),
+                         jnp.asarray(2.0, x.dtype))
+
+    x, y, it, merit = engine.pdhg_loop(
+        op, engine.JNP_UPDATES, scaled.b, scaled.c, scaled.lb, scaled.ub,
+        T, Sigma, x0, y0, 0.95 / rho, 0.95 / rho, key,
+        max_iters=64, tol=0.1, gamma=0.0, check_every=8,
+        restart_beta=0.0, residual_fn=residual_fn)
+    # averaged merit 0.05 <= tol -> average adopted, loop exits truthfully
+    assert int(it) == 8
+    assert float(merit) == 0.05
+
+
 def test_solve_jit_kernel_pallas_matches_jnp(x64):
     """Public API: the fused-Pallas executable reproduces the jnp one."""
     lp = random_standard_lp(8, 14, seed=1)

@@ -141,6 +141,63 @@ def test_pad_problem_preserves_optimum(x64):
     assert r.status == "optimal" and rel < 1e-4
 
 
+def test_pad_problem_preserves_dtype():
+    """Regression (ISSUE 4): padding used to allocate ``np.zeros`` in
+    the default float64 regardless of ``lp.K.dtype``, doubling host
+    memory for f32 streams before the device cast."""
+    from repro.lp import StandardLP
+
+    rng = np.random.default_rng(0)
+    lp32 = StandardLP(
+        c=rng.normal(size=14).astype(np.float32),
+        K=rng.normal(size=(8, 14)).astype(np.float32),
+        b=rng.normal(size=8).astype(np.float32),
+        lb=np.zeros(14, np.float32), ub=np.full(14, np.inf, np.float32))
+    assert lp32.K.dtype == np.float32          # StandardLP preserves f32
+    padded = pad_problem(lp32, 16, 32)
+    for field in ("K", "b", "c", "lb", "ub"):
+        assert getattr(padded, field).dtype == np.float32, field
+    # f64 problems still pad in f64
+    padded64 = pad_problem(random_standard_lp(8, 14, seed=0), 16, 32)
+    assert padded64.K.dtype == np.float64
+    # and stacking follows the padded dtype (no silent promotion)
+    Ks, bs, cs, lbs, ubs = stack_problems([lp32, lp32])
+    assert Ks.dtype == np.float32 and cs.dtype == np.float32
+
+
+def test_solve_stream_async_matches_sync(x64):
+    """Submit-all-then-collect dispatch returns the SAME results as
+    blocking per-bucket serving (async is pure scheduling, not math)."""
+    lps = [
+        random_standard_lp(8, 14, seed=0),
+        random_standard_lp(10, 18, seed=1),
+        random_standard_lp(20, 34, seed=2),
+        random_standard_lp(7, 13, seed=3),
+    ]
+    opts = PDHGOptions(max_iters=2000, tol=1e-4, check_every=64,
+                       lanczos_iters=16)
+    r_async = BatchSolver(opts).solve_stream(lps)
+    r_sync = BatchSolver(opts, async_dispatch=False).solve_stream(lps)
+    for a, s in zip(r_async, r_sync):
+        assert a.name == s.name and a.iterations == s.iterations
+        np.testing.assert_allclose(a.x, s.x)
+        assert a.merit == s.merit
+
+
+def test_solve_stream_records_stream_stats(x64):
+    """Every solve_stream call audits what it stacked and when it
+    dispatched/collected (the serving observability surface)."""
+    solver = BatchSolver(PDHGOptions(max_iters=128, tol=1e-30,
+                                     check_every=64, lanczos_iters=8))
+    solver.solve_stream([random_standard_lp(8, 14, seed=0),
+                         random_standard_lp(20, 34, seed=1)])
+    st = solver.last_stream_stats
+    assert st["n_buckets"] == 2
+    assert st["dense_stack_bytes"] > 0
+    assert st["sparse_stack_bytes"] == 0
+    assert st["dispatch_s"] >= 0 and st["collect_s"] >= 0
+
+
 def test_stack_problems_legacy_max_shape():
     lps = [random_standard_lp(8, 14, seed=0), random_standard_lp(6, 11, seed=1)]
     Ks, bs, cs, lbs, ubs = stack_problems(lps)

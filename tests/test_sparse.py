@@ -1,0 +1,291 @@
+"""Sparse LP serving: SparseCOO model, sparse operator backend, and the
+COO bucket pipeline (ISSUE 4 tentpole).
+
+The acceptance contract: a >=95%-sparse stream must flow through the
+batch scheduler with NO dense (B, m_pad, n_pad) materialization, match
+the dense path's iterates at sigma_read=0, and stack in
+nonzero-proportional host memory (>=4x smaller than the dense stack).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PDHGOptions, engine
+from repro.lp import SparseCOO, random_standard_lp, sparse_lp_stream, \
+    sparse_random_standard_lp
+from repro.runtime import BatchSolver
+from repro.runtime import batch as batch_mod
+from repro.runtime.batch import (
+    nnz_bucket,
+    pad_problem,
+    stack_problems_sparse,
+)
+
+OPTS = PDHGOptions(max_iters=20000, tol=1e-5, check_every=64)
+
+
+# ------------------------------------------------------------ SparseCOO ---
+
+def test_sparse_coo_matvec_and_transpose_match_dense(rng):
+    K = rng.normal(size=(7, 11)) * (rng.random((7, 11)) < 0.3)
+    sp = SparseCOO.from_dense(K)
+    assert sp.nnz == np.count_nonzero(K)
+    x, y = rng.normal(size=11), rng.normal(size=7)
+    np.testing.assert_allclose(sp @ x, K @ x)
+    np.testing.assert_allclose(sp.T @ y, K.T @ y)
+    np.testing.assert_allclose(sp.toarray(), K)
+    np.testing.assert_allclose(sp.T.toarray(), K.T)
+
+
+def test_sparse_coo_duplicate_indices_sum(rng):
+    sp = SparseCOO([1.0, 2.0, 5.0], [0, 0, 1], [1, 1, 0], (2, 3))
+    dense = sp.toarray()
+    assert dense[0, 1] == 3.0 and dense[1, 0] == 5.0
+    np.testing.assert_allclose(sp @ np.ones(3), dense @ np.ones(3))
+
+
+def test_standard_lp_sparse_roundtrip():
+    lp = sparse_random_standard_lp(12, 24, density=0.2, seed=0)
+    assert lp.is_sparse
+    dense = lp.densified()
+    assert not dense.is_sparse
+    np.testing.assert_allclose(dense.K, lp.K.toarray())
+    back = dense.sparsified()
+    assert back.is_sparse
+    np.testing.assert_allclose(back.K.toarray(), dense.K)
+    # known optimum is feasible under the COO matvec
+    assert np.linalg.norm(lp.K @ lp.x_opt - lp.b) < 1e-10
+
+
+def test_sparse_generator_density_and_coverage():
+    lp = sparse_random_standard_lp(64, 128, density=0.05, seed=3)
+    assert 0.02 < lp.K.density < 0.10
+    # coverage guarantee: no zero rows or columns
+    assert np.all(np.bincount(lp.K.row, minlength=64) > 0)
+    assert np.all(np.bincount(lp.K.col, minlength=128) > 0)
+
+
+# ----------------------------------------------------- padding / stacking ---
+
+def test_pad_problem_sparse_never_densifies():
+    lp = sparse_random_standard_lp(10, 20, density=0.2, seed=1)
+    padded = pad_problem(lp, 16, 32)
+    assert isinstance(padded.K, SparseCOO)
+    assert padded.K.shape == (16, 32)
+    assert padded.K.nnz == lp.K.nnz          # same data, bigger shape
+    # padding preserves the optimum semantics: pinned extra vars
+    assert np.all(padded.lb[20:] == 0) and np.all(padded.ub[20:] == 0)
+
+
+def test_stack_problems_sparse_layout():
+    lps = [sparse_random_standard_lp(8, 16, density=0.3, seed=s)
+           for s in range(3)]
+    nnz = nnz_bucket(max(lp.K.nnz for lp in lps))
+    data, idx, b, c, lb, ub = stack_problems_sparse(lps, m=16, n=32,
+                                                    nnz=nnz)
+    assert data.shape == (3, nnz) and idx.shape == (3, nnz, 2)
+    assert b.shape == (3, 16) and c.shape == (3, 32)
+    assert idx.dtype == np.int32
+    # nnz padding is explicit zeros at (0, 0): contraction-neutral
+    k = lps[0].K.nnz
+    assert np.all(data[0, k:] == 0) and np.all(idx[0, k:] == 0)
+    # stacked operator reproduces each instance
+    K0 = np.zeros((16, 32))
+    np.add.at(K0, (idx[0, :, 0], idx[0, :, 1]), data[0])
+    np.testing.assert_allclose(K0[:8, :16], lps[0].K.toarray())
+
+
+# ------------------------------------------------- engine sparse operator ---
+
+def test_sparse_operator_iterate_parity_with_dense(x64):
+    """sparse_operator must reproduce dense_operator's PDHG trajectory
+    at sigma_read=0 (the ISSUE-4 parity requirement)."""
+    from jax.experimental import sparse as jsparse
+
+    lp = sparse_random_standard_lp(12, 24, density=0.25, seed=2)
+    K = jnp.asarray(lp.K.toarray())
+    K_sp = jsparse.BCOO(
+        (jnp.asarray(lp.K.data), jnp.asarray(
+            np.stack([lp.K.row, lp.K.col], axis=1))), shape=lp.K.shape)
+    b, c = jnp.asarray(lp.b), jnp.asarray(lp.c)
+    lb, ub = jnp.asarray(lp.lb), jnp.asarray(lp.ub)
+    T = jnp.ones(24); Sigma = jnp.ones(12)
+    key, x0, y0 = engine.draw_init(jax.random.PRNGKey(0), 12, 24, lb, ub,
+                                   K.dtype)
+    tau = sigma = 0.9 / float(jnp.linalg.norm(K, 2))
+
+    states = {}
+    for name, op in (("dense", engine.dense_operator(K, K.T)),
+                     ("sparse", engine.sparse_operator(K_sp))):
+        state = engine.init_state(x0, y0, tau, sigma, gamma=0.0)
+        for _ in range(50):
+            state = engine.pdhg_step(op, engine.JNP_UPDATES, b, c, lb, ub,
+                                     T, Sigma, 0.0, state)
+        states[name] = state
+    np.testing.assert_allclose(states["sparse"].x, states["dense"].x,
+                               atol=1e-12, rtol=1e-10)
+    np.testing.assert_allclose(states["sparse"].y, states["dense"].y,
+                               atol=1e-12, rtol=1e-10)
+
+
+def test_solve_core_auto_mounts_sparse_operator(x64):
+    """solve_core on a BCOO K must run without a dense K anywhere and
+    agree with the dense solve_core bit-for-bit at sigma_read=0 apart
+    from MVM summation order (allclose)."""
+    from jax.experimental import sparse as jsparse
+    from repro.core.pdhg import opts_static
+
+    lp = sparse_random_standard_lp(10, 20, density=0.3, seed=4)
+    Kd = jnp.asarray(lp.K.toarray())
+    K_sp = jsparse.BCOO(
+        (jnp.asarray(lp.K.data), jnp.asarray(
+            np.stack([lp.K.row, lp.K.col], axis=1))), shape=lp.K.shape)
+    b, c = jnp.asarray(lp.b), jnp.asarray(lp.c)
+    lb, ub = jnp.asarray(lp.lb), jnp.asarray(lp.ub)
+    T, Sigma = jnp.ones(20), jnp.ones(10)
+    rho = float(jnp.linalg.norm(Kd, 2))
+    static = opts_static(PDHGOptions(max_iters=512, tol=1e-9,
+                                     check_every=64))
+    key = jax.random.PRNGKey(1)
+    xd, yd, itd, md = engine.solve_core(Kd, Kd.T, b, c, lb, ub, T, Sigma,
+                                        rho, key, static)
+    xs, ys, its, ms = engine.solve_core(K_sp, None, b, c, lb, ub, T,
+                                        Sigma, rho, key, static)
+    assert int(its) == int(itd)
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(xd), atol=1e-8)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yd), atol=1e-8)
+
+
+# ------------------------------------------------------- stream serving ---
+
+def test_sparse_stream_solves_without_dense_materialization(x64,
+                                                            monkeypatch):
+    """The acceptance assertion: a sparse stream through BatchSolver may
+    NEVER materialize a dense (B, m_pad, n_pad) stack — dense stacking
+    is poisoned for the duration and host bytes are audited."""
+    def _poisoned(*a, **k):
+        raise AssertionError(
+            "dense stack_problems called for a sparse stream")
+
+    monkeypatch.setattr(batch_mod, "stack_problems", _poisoned)
+    lps = sparse_lp_stream(4, density=0.05, seed=0)
+    solver = BatchSolver(PDHGOptions(max_iters=20000, tol=1e-4,
+                                     check_every=64))
+    results = solver.solve_stream(lps)
+    stats = solver.last_stream_stats
+    assert stats["dense_stack_bytes"] == 0
+    assert stats["sparse_stack_bytes"] > 0
+    for lp, r in zip(lps, results):
+        assert r.sparse
+        rel = abs(r.obj - lp.obj_opt) / abs(lp.obj_opt)
+        assert rel < 1e-3, (lp.name, rel)
+        assert r.x.shape == (lp.K.shape[1],)
+
+
+def test_sparse_stream_host_memory_at_least_4x_smaller(x64):
+    """>=95%-sparse 16-instance stream: the sparse stack must be >=4x
+    smaller on host than the dense stack of the same stream (the
+    acceptance criterion's memory leg)."""
+    lps = sparse_lp_stream(16, density=0.05, seed=0)
+    assert all(lp.K.density <= 0.05 + 1e-9 for lp in lps)
+    opts = PDHGOptions(max_iters=64, tol=1e-30, check_every=64,
+                       lanczos_iters=8)
+    sp = BatchSolver(opts)
+    sp.solve_stream(lps)
+    dn = BatchSolver(opts)
+    dn.solve_stream([lp.densified() for lp in lps])
+    mem_sparse = sp.last_stream_stats["sparse_stack_bytes"]
+    mem_dense = dn.last_stream_stats["dense_stack_bytes"]
+    assert mem_sparse > 0 and mem_dense > 0
+    assert mem_dense >= 4 * mem_sparse, (mem_dense, mem_sparse)
+
+
+def test_sparse_stream_matches_dense_stream(x64):
+    """Sparse pipeline vs densified dense pipeline on the same stream:
+    same iteration counts and matching objectives (sigma_read=0)."""
+    lps = sparse_lp_stream(3, density=0.05, seed=0)
+    opts = PDHGOptions(max_iters=4000, tol=1e-5, check_every=64)
+    rs = BatchSolver(opts).solve_stream(lps)
+    rd = BatchSolver(opts).solve_stream([lp.densified() for lp in lps])
+    for a, d in zip(rs, rd):
+        assert a.iterations == d.iterations, (a.name, a.iterations,
+                                              d.iterations)
+        assert abs(a.obj - d.obj) / max(abs(d.obj), 1e-12) < 1e-9
+        np.testing.assert_allclose(a.x, d.x, atol=1e-6)
+
+
+def test_sparse_and_dense_buckets_are_cache_disjoint(x64):
+    """A sparse and a dense instance of the SAME shape must compile
+    separate executables (different pipelines) and both solve."""
+    sp_lp = sparse_random_standard_lp(8, 14, density=0.3, seed=0)
+    dn_lp = random_standard_lp(8, 14, seed=0)
+    solver = BatchSolver(PDHGOptions(max_iters=2000, tol=1e-4,
+                                     check_every=64, lanczos_iters=16))
+    results = solver.solve_stream([sp_lp, dn_lp])
+    assert solver.cache_misses == 2          # one sparse, one dense exe
+    assert results[0].sparse and not results[1].sparse
+    for lp, r in zip((sp_lp, dn_lp), results):
+        rel = abs(r.obj - lp.obj_opt) / abs(lp.obj_opt)
+        assert rel < 1e-2, (lp.name, rel)
+
+
+def test_crossbar_batch_solver_densifies_sparse(x64):
+    """The crossbar tier programs every physical cell: sparse instances
+    must densify on entry and still serve correctly."""
+    from repro.crossbar import EPIRAM, CrossbarBatchSolver
+
+    lp = sparse_random_standard_lp(8, 14, density=0.3, seed=1)
+    opts = PDHGOptions(max_iters=2000, tol=1e-3, check_every=64,
+                       lanczos_iters=16)
+    rep = CrossbarBatchSolver(opts, device=EPIRAM).solve_stream([lp])[0]
+    rel = abs(rep.result.obj - lp.obj_opt) / abs(lp.obj_opt)
+    assert rel < 5e-2, rel
+
+
+def test_sparse_stream_buckets_on_nnz_too(x64):
+    """An nnz outlier must not inflate its shape bucket: same-shape
+    instances with far-apart nonzero counts compile separate (smaller)
+    executables instead of padding everyone to the outlier."""
+    thin = sparse_random_standard_lp(64, 128, density=0.04, seed=0)
+    fat = sparse_random_standard_lp(64, 128, density=0.5, seed=1)
+    assert nnz_bucket(thin.K.nnz) != nnz_bucket(fat.K.nnz)
+    solver = BatchSolver(PDHGOptions(max_iters=64, tol=1e-30,
+                                     check_every=64, lanczos_iters=8))
+    solver.solve_stream([thin, fat])
+    assert solver.last_stream_stats["n_buckets"] == 2
+    assert solver.cache_misses == 2
+    # the thin instance's stack is nnz-proportional, not outlier-sized
+    expected_thin = nnz_bucket(thin.K.nnz)
+    expected_fat = nnz_bucket(fat.K.nnz)
+    assert expected_thin * 4 < expected_fat
+
+
+def test_sparse_duplicate_indices_match_densified(x64):
+    """Duplicate COO entries sum (the BCOO convention): a duplicate-
+    bearing instance must solve identically to its densified copy —
+    the stacking coalesces before the scatter preconditioners."""
+    base = sparse_random_standard_lp(8, 14, density=0.4, seed=5)
+    K = base.K
+    # split the first entry into two stored halves at the same (r, c)
+    dup = SparseCOO(
+        np.concatenate([[K.data[0] / 2, K.data[0] / 2], K.data[1:]]),
+        np.concatenate([[K.row[0]], K.row]),
+        np.concatenate([[K.col[0]], K.col]), K.shape)
+    np.testing.assert_allclose(dup.toarray(), K.toarray())
+    lp_dup = dataclasses.replace(base, K=dup)
+    opts = PDHGOptions(max_iters=2000, tol=1e-5, check_every=64,
+                       lanczos_iters=16)
+    r_dup = BatchSolver(opts).solve_stream([lp_dup])[0]
+    r_dense = BatchSolver(opts).solve_stream([base.densified()])[0]
+    assert r_dup.iterations == r_dense.iterations
+    np.testing.assert_allclose(r_dup.x, r_dense.x, atol=1e-8)
+
+
+def test_nnz_bucket_rounds_to_pow2():
+    assert nnz_bucket(1) == 16
+    assert nnz_bucket(16) == 16
+    assert nnz_bucket(17) == 32
+    assert nnz_bucket(900) == 1024

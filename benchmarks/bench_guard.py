@@ -3,15 +3,17 @@
 CI runs this right after the smoke stream benchmark:
 
   1. **Schema validation** — the candidate record must be
-     ``bench_stream/v2``: every serving path (dense batched /
+     ``bench_stream/v3``: every serving path (dense batched /
      per-instance, crossbar batched / per-instance, sparse batched +
-     its densified baseline, async + sync dispatch) present with finite
-     numeric ``cold_s``/``warm_s``/``mvm_total``, plus the ``sparse``
-     host-memory summary.
+     its densified baseline, async + sync dispatch, per-pod routed
+     cluster serving) present with finite numeric
+     ``cold_s``/``warm_s``/``mvm_total``, plus the ``sparse``
+     host-memory summary and the ``cluster`` routing summary
+     (non-empty routing table, per-pod throughput shares).
   2. **Regression gate** — the warm BUCKETED paths (the steady-state
      serving numbers) must not regress more than ``--max-regression``
      (default 2x) against the committed baseline
-     (``git show HEAD:BENCH_stream.json`` in CI).  A v1 baseline is
+     (``git show HEAD:BENCH_stream.json`` in CI).  v1/v2 baselines are
      accepted: only the path keys both records share are compared.
 
 Exit code 0 = pass; 1 = schema or regression failure (messages on
@@ -27,9 +29,9 @@ import json
 import math
 import sys
 
-SCHEMA = "bench_stream/v2"
+SCHEMA = "bench_stream/v3"
 
-# every serving path a v2 record must carry
+# every serving path a v3 record must carry
 REQUIRED_PATHS = (
     "exact_batched",
     "exact_per_instance",
@@ -39,14 +41,20 @@ REQUIRED_PATHS = (
     "sparse_batched_dense",
     "exact_batched_async",
     "exact_batched_sync",
+    "exact_routed",
 )
 PATH_FIELDS = ("cold_s", "warm_s", "mvm_total")
 SPARSE_FIELDS = ("density", "host_stack_bytes_dense",
                  "host_stack_bytes_sparse", "host_mem_improvement",
                  "speedup_warm")
+CLUSTER_FIELDS = ("n_pods", "routing", "per_pod", "rerouted_buckets",
+                  "max_rel_disagreement_vs_unrouted")
+PER_POD_FIELDS = ("n_buckets", "n_instances", "flops_cost", "flops_share",
+                  "warm_s", "instances_per_s_warm")
 
 # warm steady-state serving paths gated against the committed baseline
-GUARDED_WARM_PATHS = ("exact_batched", "crossbar_batched", "sparse_batched")
+GUARDED_WARM_PATHS = ("exact_batched", "crossbar_batched", "sparse_batched",
+                      "exact_routed")
 
 
 def _fail(msg: str) -> None:
@@ -82,6 +90,24 @@ def validate_schema(bench: dict) -> None:
         if not _finite_number(sparse.get(field)):
             _fail(f"sparse.{field} is not a finite number: "
                   f"{sparse.get(field)!r}")
+    cluster = bench.get("cluster")
+    if not isinstance(cluster, dict):
+        _fail("missing 'cluster' summary")
+    for field in CLUSTER_FIELDS:
+        if field not in cluster:
+            _fail(f"cluster.{field} missing")
+    if not isinstance(cluster["routing"], dict) or not cluster["routing"]:
+        _fail("cluster.routing must be a non-empty bucket->pod table")
+    if not isinstance(cluster["per_pod"], dict) or not cluster["per_pod"]:
+        _fail("cluster.per_pod must be a non-empty pod->stats table")
+    for pod, entry in cluster["per_pod"].items():
+        for field in PER_POD_FIELDS:
+            if not _finite_number(entry.get(field)):
+                _fail(f"cluster.per_pod[{pod}].{field} is not a finite "
+                      f"number: {entry.get(field)!r}")
+    pods_routed = set(cluster["routing"].values())
+    if not pods_routed <= set(range(int(cluster["n_pods"]))):
+        _fail(f"cluster.routing targets unknown pods: {pods_routed}")
 
 
 def check_regressions(candidate: dict, baseline: dict,
@@ -91,7 +117,7 @@ def check_regressions(candidate: dict, baseline: dict,
     for name in GUARDED_WARM_PATHS:
         base = base_paths.get(name)
         if not isinstance(base, dict):
-            continue        # v1 baselines predate the sparse/async paths
+            continue        # v1/v2 baselines predate sparse/async/routed
         base_warm = base.get("warm_s")
         cand_warm = candidate["paths"][name]["warm_s"]
         if not _finite_number(base_warm) or base_warm <= 0:

@@ -20,12 +20,13 @@ Each timed path runs twice: COLD includes compilation, WARM is the
 steady-state serving cost (the number that matters for throughput).
 ``--kernel`` selects the engine's update backend (jnp vs fused Pallas).
 Besides the full record, every run emits ``BENCH_stream.json`` at the
-repo root (schema ``bench_stream/v2``: per-path warm/cold seconds +
-device-MVM totals, now including the sparse COO pipeline and the
-async-vs-sync dispatch split, plus a ``sparse`` summary of the host
-bytes each stacking path materialized) as the perf baseline for future
-PRs; CI uploads it and ``benchmarks/bench_guard.py`` gates regressions
-against it.
+repo root (schema ``bench_stream/v3``: per-path warm/cold seconds +
+device-MVM totals — including the sparse COO pipeline, the
+async-vs-sync dispatch split and the per-pod ROUTED cluster path — plus
+a ``sparse`` host-memory summary and a ``cluster`` summary with the
+routing table and per-pod throughput shares) as the perf baseline for
+future PRs; CI uploads it and ``benchmarks/bench_guard.py`` gates
+regressions against it.
 """
 from __future__ import annotations
 
@@ -191,6 +192,75 @@ def bench_async(lps, opts):
     }
 
 
+def bench_cluster(lps, opts, n_pods: int = 2):
+    """Per-pod routed serving vs. the unrouted scheduler on the same
+    mixed stream.
+
+    Runs single-process with ``n_pods`` routing targets (pods beyond
+    the live process are *virtual*: the coordinator reroutes their
+    buckets through the straggler path), so the routed timings capture
+    the routing + transport + reroute machinery itself.  Per-pod
+    throughput is then measured HONESTLY: each pod's routed sub-stream
+    is served on its own (what that pod of a real deployment would
+    actually run) and warm-timed separately.
+    """
+    from repro.runtime import BatchSolver, ClusterBatchSolver
+    from repro.runtime.cluster import bucket_tag
+
+    timings = {}
+    base = BatchSolver(opts)
+    base_results = base.solve_stream(lps)
+
+    # no explicit transport: the solver owns a private scratch dir and
+    # cleans it up per stream (single-process virtual-pod mode)
+    solver = ClusterBatchSolver(opts, pod=0, n_pods=n_pods, live_pods=1,
+                                straggler_timeout=30.0)
+    t0 = time.time(); results = solver.solve_stream(lps)
+    timings["routed_cold_s"] = time.time() - t0
+    t0 = time.time(); results = solver.solve_stream(lps)
+    timings["routed_warm_s"] = time.time() - t0
+    st = solver.last_stream_stats
+
+    # per-pod shares from the solver's own audit surface (the table the
+    # routing actually used — never re-derived here), throughput from
+    # serving each pod's routed sub-stream separately
+    buckets = solver._group_buckets(lps)
+    pod_instances = {}
+    per_pod = {}
+    for key, idxs in buckets.items():
+        tag = bucket_tag(key)
+        pod = st["routing"][tag]
+        d = per_pod.setdefault(str(pod), {"n_buckets": 0, "n_instances": 0,
+                                          "flops_cost": 0})
+        d["n_buckets"] += 1
+        d["n_instances"] += solver.last_bucket_sizes[tag]
+        d["flops_cost"] += solver.last_costs[tag]
+        pod_instances.setdefault(str(pod), []).extend(
+            lps[i] for i in idxs)
+    total_cost = max(sum(d["flops_cost"] for d in per_pod.values()), 1)
+    for pod, d in per_pod.items():
+        d["flops_share"] = d["flops_cost"] / total_cost
+        pod_solver = BatchSolver(opts)
+        pod_solver.solve_stream(pod_instances[pod])          # compile
+        t0 = time.time(); pod_solver.solve_stream(pod_instances[pod])
+        d["warm_s"] = time.time() - t0
+        d["instances_per_s_warm"] = d["n_instances"] / max(d["warm_s"],
+                                                           1e-12)
+
+    agree = max(abs(r.obj - b.obj) / max(abs(b.obj), 1e-12)
+                for r, b in zip(results, base_results))
+    return {
+        **timings,
+        "n_pods": n_pods,
+        "routing": dict(st["routing"]),
+        "per_pod": per_pod,
+        "rerouted_buckets": int(st["rerouted_buckets"]),
+        "gather_s": st.get("gather_s", 0.0),
+        "max_rel_disagreement_vs_unrouted": float(agree),
+        "mvm_total_routed": int(sum(r.mvm_calls for r in results)),
+    }
+
+
 def bench_device(lps, opts, device):
     """CrossbarBatchSolver vs. a per-instance solve_crossbar_jit loop.
 
@@ -257,6 +327,9 @@ def main(argv=None):
     ap.add_argument("--max-iters", type=int, default=None)
     ap.add_argument("--tol", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pods", type=int, default=2,
+                    help="routing targets for the cluster path (pods "
+                         "beyond the live process are virtual)")
     ap.add_argument("--out", default=None,
                     help="JSON output path (default under experiments/)")
     args = ap.parse_args(argv)
@@ -300,6 +373,7 @@ def main(argv=None):
         "crossbar": bench_device(lps, opts, device),
         "sparse": bench_sparse(sparse_lps, opts),
         "async": bench_async(lps, opts),
+        "cluster": bench_cluster(lps, opts, n_pods=args.pods),
     }
 
     out = args.out or os.path.join(
@@ -315,7 +389,7 @@ def main(argv=None):
     # upload it as a stable-named artifact next to the full record and
     # ``bench_guard.py`` can gate schema + warm-path regressions on it.
     bench = {
-        "schema": "bench_stream/v2",
+        "schema": "bench_stream/v3",
         "kernel": args.kernel,
         "config": record["config"],
         "paths": {
@@ -348,6 +422,19 @@ def main(argv=None):
                 "warm_s": record["async"]["sync_warm_s"],
                 "mvm_total": record["async"]["mvm_total_sync"],
             },
+            "exact_routed": {
+                "cold_s": record["cluster"]["routed_cold_s"],
+                "warm_s": record["cluster"]["routed_warm_s"],
+                "mvm_total": record["cluster"]["mvm_total_routed"],
+            },
+        },
+        "cluster": {
+            "n_pods": record["cluster"]["n_pods"],
+            "routing": record["cluster"]["routing"],
+            "per_pod": record["cluster"]["per_pod"],
+            "rerouted_buckets": record["cluster"]["rerouted_buckets"],
+            "max_rel_disagreement_vs_unrouted":
+                record["cluster"]["max_rel_disagreement_vs_unrouted"],
         },
         "sparse": {
             "density": record["sparse"]["density"],
@@ -386,6 +473,15 @@ def main(argv=None):
           f" | speedup {r['speedup_warm']:.2f}x"
           f" | dispatch {r['dispatch_s']:.3f}s"
           f" collect {r['collect_s']:.3f}s over {r['n_buckets']} buckets")
+    r = record["cluster"]
+    pods = ", ".join(
+        f"pod{p}: {d['n_buckets']}bkt/{d['n_instances']}inst "
+        f"({d['flops_share']:.0%} FLOPs)"
+        for p, d in sorted(r["per_pod"].items()))
+    print(f"[cluster] routed warm {r['routed_warm_s']:.3f}s over "
+          f"{r['n_pods']} pods | {pods} | rerouted "
+          f"{r['rerouted_buckets']} | max disagreement "
+          f"{r['max_rel_disagreement_vs_unrouted']:.2e}")
     led = record["crossbar"]["ledger_batched"]
     print(f"[crossbar] stream write={led['write_energy_j']:.3f}J "
           f"(padding {led['write_energy_padding_j']:.3f}J) "

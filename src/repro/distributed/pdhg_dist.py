@@ -22,6 +22,11 @@ Exposes:
   * ``make_dist_step``  — jitted k-iteration step (dry-run / roofline unit)
   * ``solve_dist``      — full solver: pad, shard, engine loop with KKT
                           checks + adaptive restarts, unscale.
+  * ``solve_dist_auto`` — ``solve_dist`` over the cluster-global mesh
+                          (``runtime.cluster`` + ``make_cluster_mesh``):
+                          multi-process deployments shard_map over ALL
+                          pods' devices; single-process falls back to
+                          the local mesh.
 """
 from __future__ import annotations
 
@@ -249,3 +254,26 @@ def solve_dist(
                                         lanczos_mvms),
         merit=float(merit),
     )
+
+
+def solve_dist_auto(
+    lp: StandardLP,
+    opts: PDHGOptions = PDHGOptions(),
+    cluster: str = "auto",
+    tile_dtype=None,
+) -> PDHGResult:
+    """``solve_dist`` over the process-spanning global mesh.
+
+    Brings the cluster up through ``runtime.cluster.init_cluster``
+    (env-driven, idempotent, single-process fallback) and shard_maps
+    over ``make_cluster_mesh()`` — in a multi-process deployment the
+    pod axis is one process per pod and every psum crosses the
+    interconnect; single-process this degrades to the local-devices
+    mesh, so every existing entry point keeps working unchanged.
+    """
+    from ..runtime import cluster as cluster_mod
+    from ..runtime.mesh import make_cluster_mesh, make_local_mesh
+
+    info = cluster_mod.init_cluster(cluster)
+    mesh = make_cluster_mesh() if info.is_multiprocess else make_local_mesh()
+    return solve_dist(lp, mesh, opts, tile_dtype=tile_dtype)

@@ -14,6 +14,10 @@
   PYTHONPATH=src python -m repro.launch.solve --backend batch --sparse \
       --instances sprand:96x192:0.05,sprand:128x256:0.02
       # sparse COO stream: nonzero-proportional memory, async dispatch
+  REPRO_COORDINATOR=host0:9876 REPRO_NUM_PROCESSES=2 REPRO_PROCESS_ID=0 \
+  PYTHONPATH=src python -m repro.launch.solve --backend batch \
+      --cluster auto --instances rand:8x14,rand:10x18,rand:24x40
+      # multi-host serving: per-pod bucket routing + straggler reroute
 """
 from __future__ import annotations
 
@@ -79,6 +83,19 @@ def main(argv=None):
                     help="with --backend batch: block per bucket instead "
                          "of the default submit-all-then-collect async "
                          "dispatch")
+    ap.add_argument("--cluster", default="off", choices=["auto", "off"],
+                    help="multi-host serving: 'auto' initializes "
+                         "jax.distributed from REPRO_COORDINATOR/"
+                         "REPRO_NUM_PROCESSES/REPRO_PROCESS_ID (falling "
+                         "back to single-process when unset) and routes "
+                         "buckets across pods; 'off' serves everything "
+                         "in-process")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="route buckets across N pods (default: the "
+                         "detected process count).  N beyond the live "
+                         "process count creates virtual pods whose "
+                         "buckets the coordinator reroutes — a single-"
+                         "process way to exercise the routing table")
     ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"],
                     help="engine update backend: reference jnp vector "
                          "algebra or the fused Pallas kernels (interpret "
@@ -102,7 +119,17 @@ def main(argv=None):
         ap.error("--kernel pallas is not wired into the shard_map path "
                  "(the distributed engine runs the psum-tiled operator "
                  "with jnp updates)")
+    if args.pods is not None and args.backend != "batch":
+        ap.error("--pods only applies to --backend batch (distributed "
+                 "spans processes through the global mesh directly)")
+    if (args.cluster != "off" or args.pods is not None) \
+            and args.device != "none":
+        ap.error("--cluster/--pods do not combine with --device: the "
+                 "crossbar batch path is single-process")
 
+    from ..runtime import cluster as cluster_mod
+
+    info = cluster_mod.init_cluster(args.cluster)
     jax.config.update("jax_enable_x64", True)
     opts = PDHGOptions(max_iters=args.max_iters, tol=args.tol,
                        check_every=100, seed=args.seed,
@@ -131,7 +158,13 @@ def main(argv=None):
             return reports
         if args.sparse:
             lps = [lp.sparsified() for lp in lps]
-        solver = BatchSolver(opts, async_dispatch=not args.sync)
+        n_pods = args.pods if args.pods is not None else info.num_processes
+        if n_pods > 1 or info.is_multiprocess:
+            from ..runtime import ClusterBatchSolver
+            solver = ClusterBatchSolver(opts, async_dispatch=not args.sync,
+                                        n_pods=n_pods)
+        else:
+            solver = BatchSolver(opts, async_dispatch=not args.sync)
         results = solver.solve_stream(lps)
         for lp, r in zip(lps, results):
             line = (f"instance={r.name} shape={lp.K.shape} "
@@ -149,6 +182,11 @@ def main(argv=None):
               f"collect={st['collect_s']:.3f}s "
               f"host_stack_bytes=dense:{st['dense_stack_bytes']}"
               f"/sparse:{st['sparse_stack_bytes']}")
+        if "routing" in st:
+            print(f"cluster: pod={st['pod']}/{st['n_pods']} "
+                  f"local_buckets={st['n_local_buckets']} "
+                  f"rerouted={st['rerouted_buckets']} "
+                  f"routing={st['routing']}")
         return results
 
     lp = load_instance(args.instance, seed=args.seed)
@@ -160,9 +198,14 @@ def main(argv=None):
         rep = solve_crossbar_jit(lp, opts, device=dev)
         res, led = rep.result, rep.ledger
     else:
-        from ..distributed.pdhg_dist import solve_dist
-        mesh = make_local_mesh()
-        res = solve_dist(lp, mesh, opts)
+        if args.cluster != "off":
+            # shard_map over the process-spanning global mesh
+            from ..distributed.pdhg_dist import solve_dist_auto
+            res = solve_dist_auto(lp, opts, cluster=args.cluster)
+        else:
+            from ..distributed.pdhg_dist import solve_dist
+            mesh = make_local_mesh()
+            res = solve_dist(lp, mesh, opts)
         led = None
 
     print(f"instance={lp.name} shape={lp.K.shape} backend={args.backend}")

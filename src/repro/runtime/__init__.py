@@ -12,12 +12,21 @@ device and sharding machinery:
     a CPU multi-device fallback for tests.
   * ``runtime.batch``   — shape-bucketed batch solving of heterogeneous
     LP streams with a compiled-executable cache per bucket.
+  * ``runtime.cluster`` — multi-host serving: env-driven
+    ``jax.distributed`` bring-up with a single-process fallback,
+    deterministic per-pod bucket routing, and the
+    ``ClusterBatchSolver`` routed-stream scheduler.
 
 No module outside ``runtime.compat`` may reference the volatile
 ``jax.sharding`` attributes directly.
 """
 from . import batch, compat, mesh
+# cluster pulls in repro.distributed (fault-tolerant transport); import
+# it last so the partially initialized package already exposes the
+# submodules that chain re-enters (compat via distributed.pdhg_dist)
+from . import cluster
 from .batch import BatchSolver, solve_stream
+from .cluster import ClusterBatchSolver, init_cluster
 from .compat import (
     batch_axes,
     constrain,
@@ -26,15 +35,24 @@ from .compat import (
     shard_map,
     use_mesh,
 )
-from .mesh import make_local_mesh, make_mesh, make_production_mesh
+from .mesh import (
+    make_cluster_mesh,
+    make_local_mesh,
+    make_mesh,
+    make_production_mesh,
+)
 
 __all__ = [
     "BatchSolver",
+    "ClusterBatchSolver",
     "batch",
     "batch_axes",
+    "cluster",
     "compat",
     "constrain",
     "get_abstract_mesh",
+    "init_cluster",
+    "make_cluster_mesh",
     "make_local_mesh",
     "make_mesh",
     "make_production_mesh",

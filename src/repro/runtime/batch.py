@@ -597,19 +597,13 @@ class BatchSolver:
             keys = jax.device_put(keys, sh)
         return exe(*arrays, keys)
 
-    def solve_stream(self, lps: Sequence[StandardLP]) -> List[BatchItemResult]:
-        """Solve a heterogeneous stream; results come back in input order.
+    def _group_buckets(self, lps: Sequence[StandardLP]) -> dict:
+        """Group stream positions by ((m_bucket, n_bucket), nnz_bucket).
 
-        Dispatch-then-collect: every bucket is stacked and submitted to
-        its compiled executable before ANY result is pulled back (JAX
-        dispatch is asynchronous, so device work overlaps host stacking
-        of later buckets), then results are collected preferring buckets
-        whose buffers are already ready.  ``async_dispatch=False``
-        restores blocking per-bucket serving.
-        """
-        lps = list(lps)
-        dtype = jnp.dtype(self.opts.dtype)
-        buckets = {}
+        Pure function of the stream (and solver config): every process
+        of a multi-pod deployment derives the identical grouping, which
+        is what makes coordination-free bucket routing possible."""
+        buckets: dict = {}
         for i, lp in enumerate(lps):
             sp = bool(getattr(lp, "is_sparse", False)) and \
                 self.supports_sparse
@@ -619,22 +613,60 @@ class BatchSolver:
             nz = nnz_bucket(lp.K.nnz) if sp else None
             buckets.setdefault((self._bucket(*lp.K.shape), nz),
                                []).append(i)
+        return buckets
+
+    # -- multi-pod routing hooks (runtime.cluster overrides these) ----
+
+    def _route(self, buckets: dict) -> Tuple[dict, dict]:
+        """Split buckets into (served here, served by other pods).
+
+        The base scheduler is single-pod: everything is local."""
+        return buckets, {}
+
+    def _bucket_served(self, key, idxs: Sequence[int], out) -> None:
+        """Called once per locally served bucket with its device outputs
+        (after collection) — the cluster solver publishes here."""
+
+    def _gather_remote(self, remote: dict, lps, results, stats) -> None:
+        """Collect buckets served by other pods.  Single-pod: none."""
+        if remote:      # pragma: no cover - _route never yields any here
+            raise RuntimeError("base BatchSolver cannot gather remote "
+                               f"buckets: {sorted(remote)}")
+
+    def solve_stream(self, lps: Sequence[StandardLP]) -> List[BatchItemResult]:
+        """Solve a heterogeneous stream; results come back in input order.
+
+        Dispatch-then-collect: every locally routed bucket is stacked
+        and submitted to its compiled executable before ANY result is
+        pulled back (JAX dispatch is asynchronous, so device work
+        overlaps host stacking of later buckets), then results are
+        collected preferring buckets whose buffers are already ready.
+        ``async_dispatch=False`` restores blocking per-bucket serving.
+        Buckets routed to OTHER pods (``runtime.cluster``) are gathered
+        after the local work completes.
+        """
+        lps = list(lps)
+        dtype = jnp.dtype(self.opts.dtype)
+        buckets = self._group_buckets(lps)
+        mine, remote = self._route(buckets)
 
         results: List[Optional[object]] = [None] * len(lps)
-        stats = {"n_buckets": len(buckets), "dense_stack_bytes": 0,
+        stats = {"n_buckets": len(buckets), "n_local_buckets": len(mine),
+                 "dense_stack_bytes": 0,
                  "sparse_stack_bytes": 0, "donated_buckets": 0,
                  "dispatch_s": 0.0, "collect_s": 0.0}
         t0 = time.perf_counter()
         pending = []
-        for ((mb, nb), nz), idxs in buckets.items():
+        for ((mb, nb), nz), idxs in mine.items():
             group = [lps[i] for i in idxs]
             out = self._dispatch_bucket(group, idxs, len(lps), mb, nb, nz,
                                         dtype, stats)
             if self.async_dispatch:
-                pending.append((out, (mb, nb), idxs))
+                pending.append((out, ((mb, nb), nz), idxs))
             else:
                 jax.block_until_ready(out)
                 self._collect(out, (mb, nb), idxs, lps, results)
+                self._bucket_served(((mb, nb), nz), idxs, out)
         stats["dispatch_s"] = time.perf_counter() - t0
         t0 = time.perf_counter()
         while pending:
@@ -643,8 +675,11 @@ class BatchSolver:
             nxt = next((p for p in pending if _outputs_ready(p[0])),
                        pending[0])
             pending.remove(nxt)
-            self._collect(nxt[0], nxt[1], nxt[2], lps, results)
+            out, key, idxs = nxt
+            self._collect(out, key[0], idxs, lps, results)
+            self._bucket_served(key, idxs, out)
         stats["collect_s"] = time.perf_counter() - t0
+        self._gather_remote(remote, lps, results, stats)
         self.last_stream_stats = stats
         return results  # type: ignore[return-value]
 

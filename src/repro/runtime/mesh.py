@@ -58,13 +58,60 @@ def make_mesh(axes: AxesSpec, names: Optional[Sequence[str]] = None, *,
     return compat.make_mesh(shape, axis_names, devices=devices)
 
 
+def _default_pod_count() -> int:
+    """Pod axis = process granularity.  Single-process keeps the legacy
+    2-pod dry-run grid (512 fake devices); in a real multi-process
+    cluster the pod axis matches ``jax.process_count()``."""
+    from . import cluster
+
+    n = cluster.pod_count()
+    return n if n > 1 else 2
+
+
 def make_production_mesh(*, multi_pod: bool = False,
+                         pods: Optional[int] = None,
+                         grid: Tuple[int, int] = (16, 16),
                          backend: Optional[str] = None):
-    """16x16 = 256 chips/pod; multi_pod adds a 2-pod leading axis (512)."""
+    """16x16 = 256 chips/pod; ``multi_pod`` adds a leading pod axis.
+
+    The pod axis is derived from the process count (one pod per
+    process; the old hard-coded 2 survives only as the single-process
+    dry-run default) — override with ``pods``.  ``grid`` shrinks the
+    per-pod chip grid for tests.
+    """
+    rows, cols = grid
     if multi_pod:
-        return make_mesh({"pod": 2, "data": 16, "model": 16},
+        if pods is None:
+            pods = _default_pod_count()
+        return make_mesh({"pod": int(pods), "data": rows, "model": cols},
                          backend=backend)
-    return make_mesh({"data": 16, "model": 16}, backend=backend)
+    return make_mesh({"data": rows, "model": cols}, backend=backend)
+
+
+def make_cluster_mesh(axis_names: Tuple[str, ...] = ("pod", "data", "model"),
+                      *, backend: Optional[str] = None):
+    """Process-spanning mesh: pod axis = process granularity.
+
+    Devices are ordered by ``(process_index, id)`` so each pod's block
+    is exactly one process's addressable devices — shard placement along
+    the pod axis never needs cross-process transfers at setup.  Within a
+    pod the local devices form a near-square (data, model) grid.  Falls
+    back to a 1-pod mesh over the local devices when single-process, so
+    callers need no separate code path.
+    """
+    devs = sorted(jax.devices(backend) if backend else jax.devices(),
+                  key=lambda d: (d.process_index, d.id))
+    pods = max(1, getattr(jax, "process_count", lambda: 1)())
+    per_pod = len(devs) // pods
+    if per_pod * pods != len(devs):
+        raise RuntimeError(
+            f"{len(devs)} global devices do not divide into {pods} pods; "
+            "heterogeneous pods are not supported")
+    rows = max(1, per_pod // 2)
+    while per_pod % rows:
+        rows -= 1
+    cols = per_pod // rows
+    return make_mesh((pods, rows, cols), axis_names, devices=devs)
 
 
 def make_local_mesh(axis_names: Tuple[str, str] = ("data", "model"), *,

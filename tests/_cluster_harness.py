@@ -1,0 +1,216 @@
+"""Multi-process cluster harness: coordinator + worker over localhost.
+
+Real multi-host CI is unavailable, so this harness IS the multi-process
+test bed for the distributed serving stack: it spawns N (=2) Python
+processes against a shared transport directory, each running
+``ClusterBatchSolver.solve_stream`` over the SAME deterministic mixed
+stream, and the coordinator publishes the gathered results as an atomic
+``fault.save_checkpoint`` snapshot for the pytest process to compare
+against the single-process path (bitwise at ``sigma_read=0``).
+
+Two modes:
+
+  * transport-only (default): no ``jax.distributed`` — pods coordinate
+    purely through the routing table (deterministic, communication-free)
+    and the shared-filesystem result plane.  This is the mode the
+    worker-kill test uses (killing a process must not take the
+    coordination service down with it).
+  * ``--jaxdist``: the REPRO_* env vars are set and
+    ``runtime.cluster.init_cluster("auto")`` performs a real
+    ``jax.distributed.initialize`` over localhost; the harness asserts
+    the process grid (process_count, global device count, cluster-mesh
+    pod axis) before serving.
+
+Process entry (run by ``spawn_pod``):
+
+    python tests/_cluster_harness.py --pod 0 --pods 2 \
+        --transport /tmp/t --out /tmp/t/final.npz [--jaxdist ...]
+
+``--stall-after-buckets K`` makes a pod hang forever after publishing K
+bucket results — the deterministic "mid-stream" point at which the kill
+test murders the worker.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+import time
+
+# stream composition: mixed shapes -> several dense buckets + one sparse
+# bucket, so routing has real work to spread across pods
+DENSE_SHAPES = [(8, 14), (10, 18), (20, 34), (7, 13)]
+SPARSE_SHAPES = [(96, 192)]
+SPARSE_DENSITY = 0.05
+N_INSTANCES = 16
+
+
+def build_stream(n: int = N_INSTANCES, seed: int = 0):
+    """The harness stream: every pod (and the pytest process) rebuilds
+    the identical stream from (n, seed) — no data plane needed."""
+    from repro.lp import random_standard_lp, sparse_random_standard_lp
+
+    lps = []
+    for i in range(n):
+        if i % 4 == 3:      # every 4th instance exercises the COO path
+            m, nn = SPARSE_SHAPES[i % len(SPARSE_SHAPES)]
+            lps.append(sparse_random_standard_lp(
+                m, nn, density=SPARSE_DENSITY, seed=seed + i))
+        else:
+            m, nn = DENSE_SHAPES[i % len(DENSE_SHAPES)]
+            lps.append(random_standard_lp(m, nn, seed=seed + i))
+    return lps
+
+
+def harness_opts():
+    from repro.core import PDHGOptions
+
+    return PDHGOptions(max_iters=2000, tol=1e-4, check_every=64,
+                       lanczos_iters=16, seed=0)
+
+
+def results_arrays(lps, results):
+    """Flatten per-instance results into comparable arrays."""
+    import numpy as np
+
+    return {
+        "x_cat": np.concatenate([r.x for r in results]),
+        "y_cat": np.concatenate([r.y for r in results]),
+        "merits": np.asarray([r.merit for r in results]),
+        "iterations": np.asarray([r.iterations for r in results]),
+        "objs": np.asarray([r.obj for r in results]),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pod", type=int, required=True)
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--transport", required=True)
+    ap.add_argument("--out", default=None,
+                    help="coordinator writes the gathered results here")
+    ap.add_argument("--n", type=int, default=N_INSTANCES)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--straggler-timeout", type=float, default=30.0)
+    ap.add_argument("--gather-timeout", type=float, default=240.0)
+    ap.add_argument("--stall-after-buckets", type=int, default=None)
+    ap.add_argument("--jaxdist", default=None,
+                    help="coordinator address host:port -> real "
+                         "jax.distributed.initialize via REPRO_* env")
+    args = ap.parse_args(argv)
+
+    if args.jaxdist:
+        os.environ["REPRO_COORDINATOR"] = args.jaxdist
+        os.environ["REPRO_NUM_PROCESSES"] = str(args.pods)
+        os.environ["REPRO_PROCESS_ID"] = str(args.pod)
+
+    from repro.runtime import cluster as cluster_mod
+
+    info = cluster_mod.init_cluster("auto")
+    if args.jaxdist:
+        import jax
+
+        assert info.is_multiprocess and info.initialized, info
+        assert jax.process_count() == args.pods, jax.process_count()
+        assert len(jax.devices()) >= args.pods     # one+ device per pod
+        from repro.runtime.mesh import make_cluster_mesh
+        mesh = make_cluster_mesh()
+        assert mesh.shape["pod"] == args.pods, dict(mesh.shape)
+        # pod blocks are addressable-device-aligned: pod i = process i
+        assert all(d.process_index == i
+                   for i, row in enumerate(mesh.devices)
+                   for d in row.flat), "pod axis crosses process boundaries"
+        print(f"HARNESS JAXDIST OK pod={args.pod} "
+              f"devices={len(jax.devices())}", flush=True)
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.distributed.fault import save_checkpoint
+    from repro.runtime.cluster import ClusterBatchSolver, DirectoryTransport
+
+    class HarnessSolver(ClusterBatchSolver):
+        """Optionally stalls mid-stream after K published buckets (the
+        kill test's deterministic straggler point)."""
+
+        published = 0
+
+        def _bucket_served(self, key, idxs, out):
+            if args.stall_after_buckets is not None \
+                    and self.published >= args.stall_after_buckets:
+                print(f"HARNESS POD{args.pod} STALLED "
+                      f"after {self.published} buckets", flush=True)
+                time.sleep(3600)
+            super()._bucket_served(key, idxs, out)
+            self.published += 1
+
+    lps = build_stream(args.n, seed=args.seed)
+    solver = HarnessSolver(
+        harness_opts(), pod=args.pod, n_pods=args.pods,
+        live_pods=args.pods,
+        transport=DirectoryTransport(args.transport),
+        straggler_timeout=args.straggler_timeout,
+        gather_timeout=args.gather_timeout)
+    results = solver.solve_stream(lps)
+    assert all(r is not None for r in results)
+    st = solver.last_stream_stats
+    print(f"HARNESS POD{args.pod} routing={st['routing']} "
+          f"local={st['n_local_buckets']} "
+          f"rerouted={st['rerouted_buckets']}", flush=True)
+    if args.out and args.pod == 0:
+        save_checkpoint(args.out, 0, results_arrays(lps, results),
+                        {"routing": st["routing"],
+                         "rerouted": int(st["rerouted_buckets"]),
+                         "n_buckets": int(st["n_buckets"])})
+    # exit barrier: workers drop a done-marker; the coordinator (which
+    # hosts the jax.distributed coordination service in --jaxdist mode)
+    # lingers until every worker finished gathering, so its exit never
+    # tears the service down under a live worker.
+    done = os.path.join(args.transport, f"done_pod{args.pod}")
+    with open(done, "w") as f:
+        f.write("done\n")
+    if args.pod == 0 and args.jaxdist:      # transport-only pods may die
+        deadline = time.time() + 60.0
+        others = [p for p in range(args.pods) if p != 0]
+        while time.time() < deadline and any(
+                not os.path.exists(os.path.join(args.transport,
+                                                f"done_pod{p}"))
+                for p in others):
+            time.sleep(0.1)
+    print(f"HARNESS POD{args.pod} DONE", flush=True)
+    return 0
+
+
+# ---------------------------------------------------------- test driver ---
+
+def free_port() -> int:
+    s = socket.socket()
+    s.bind(("localhost", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def spawn_pod(pod: int, pods: int, transport: str, *, out=None,
+              jaxdist=None, stall_after=None, straggler_timeout=30.0,
+              gather_timeout=240.0, env=None) -> subprocess.Popen:
+    """Start one harness pod as a subprocess (test-side helper)."""
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--pod", str(pod), "--pods", str(pods),
+           "--transport", transport,
+           "--straggler-timeout", str(straggler_timeout),
+           "--gather-timeout", str(gather_timeout)]
+    if out:
+        cmd += ["--out", out]
+    if jaxdist:
+        cmd += ["--jaxdist", jaxdist]
+    if stall_after is not None:
+        cmd += ["--stall-after-buckets", str(stall_after)]
+    return subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,6 +67,23 @@ def test_solve_dist_residual_components_are_real(x64):
     assert float(r.residuals.max) < 10 * opts.tol
 
 
+def test_solve_dist_auto_single_process_fallback(x64):
+    """``solve_dist_auto`` degrades to the local mesh when the env
+    names no cluster — existing entry points work unchanged."""
+    from repro.distributed import solve_dist_auto
+    from repro.runtime import cluster as cluster_mod
+
+    cluster_mod._reset_for_tests()
+    try:
+        lp = random_standard_lp(10, 18, seed=0)
+        opts = PDHGOptions(max_iters=20000, tol=1e-6, check_every=64)
+        r = solve_dist_auto(lp, opts, cluster="off")
+        assert r.status == "optimal"
+        assert abs(r.obj - lp.obj_opt) / abs(lp.obj_opt) < 1e-4
+    finally:
+        cluster_mod._reset_for_tests()
+
+
 def test_batch_solve(x64):
     mesh = make_mesh((1,), ("data",))
     lps = [random_standard_lp(8, 14, seed=s) for s in range(3)]

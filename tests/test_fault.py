@@ -1,0 +1,211 @@
+"""Fault-tolerance contracts of ``distributed.fault``.
+
+The module's three claims, each tested here:
+
+  * **Atomicity** — a crash mid-write (torn temp file, failed rename)
+    never corrupts the last good checkpoint, and no temp litter stays
+    behind.
+  * **Bit-determinism** — PDHG state is (x, x_bar, y, tau, sigma);
+    restoring a snapshot reproduces the EXACT iterate stream the
+    uninterrupted solve would have produced.
+  * **Elastic remesh** — checkpoints are stored unsharded, so a restore
+    can target a smaller mesh and the iterates still match (device-
+    adaptive: with 1 local device both meshes degenerate to (1, 1) and
+    the match is bitwise; the 8-device CI job exercises a real 4x2 -> 1x1
+    shrink, identical to f64 round-off).
+"""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import PDHGOptions
+from repro.core import pdhg as pdhg_mod
+from repro.distributed import (
+    load_checkpoint,
+    make_dist_step,
+    reshard,
+    save_checkpoint,
+    shard_problem,
+)
+from repro.distributed.fault import CheckpointManager
+from repro.lp import random_standard_lp
+from repro.runtime.mesh import make_local_mesh, make_mesh
+
+
+# ----------------------------------------------------------- atomicity ---
+
+def test_crash_mid_write_preserves_last_good_checkpoint(tmp_path,
+                                                        monkeypatch):
+    """A crash between temp-write and rename must leave the previous
+    snapshot untouched and loadable, with no temp litter."""
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, 1, {"x": np.arange(4.0)}, {"tag": "good"})
+
+    calls = {"n": 0}
+    real_replace = os.replace
+
+    def dying_replace(src, dst):
+        calls["n"] += 1
+        raise OSError("simulated crash before rename")
+
+    monkeypatch.setattr(os, "replace", dying_replace)
+    with pytest.raises(OSError, match="simulated crash"):
+        save_checkpoint(path, 2, {"x": np.zeros(4)}, {"tag": "bad"})
+    monkeypatch.setattr(os, "replace", real_replace)
+
+    assert calls["n"] == 1
+    ck = load_checkpoint(path)                 # old snapshot intact
+    assert ck.step == 1 and ck.meta["tag"] == "good"
+    np.testing.assert_array_equal(ck.arrays["x"], np.arange(4.0))
+    # the aborted write cleaned up after itself
+    assert glob.glob(str(tmp_path / "*.tmp")) == []
+
+
+def test_torn_temp_file_is_invisible_to_manager(tmp_path):
+    """A torn ``*.tmp`` from a crashed writer is never listed as a
+    checkpoint and never shadows ``latest()``."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, every=1)
+    mgr.maybe_save(1, {"a": np.ones(2)})
+    # a writer died mid-write: partial npz bytes under a temp name
+    with open(tmp_path / "tmpXXXX.tmp", "wb") as f:
+        f.write(b"PK\x03\x04 torn")
+    assert mgr.latest().endswith("ckpt_000000000001.npz")
+    ck = load_checkpoint(mgr.latest())
+    np.testing.assert_array_equal(ck.arrays["a"], np.ones(2))
+
+
+# ---------------------------------------------------- iterate streams ---
+
+STEP_OPTS = PDHGOptions(max_iters=64, tol=1e-30, check_every=64,
+                        ruiz_iters=4, lanczos_iters=8)
+
+
+def _dist_state(lp, mesh, dtype=jnp.float64):
+    """Padded + sharded problem and a deterministic initial PDHG state."""
+    scaled, T, Sigma = pdhg_mod.prepare(lp, STEP_OPTS)
+    prob = shard_problem(scaled, T, Sigma, mesh)
+    n_pad, m_pad = prob.c.shape[0], prob.b.shape[0]
+    kx, ky = jax.random.split(jax.random.PRNGKey(3))
+    x0 = jnp.clip(jax.random.normal(kx, (n_pad,), dtype),
+                  jnp.asarray(prob.lb), jnp.asarray(prob.ub))
+    y0 = jax.random.normal(ky, (m_pad,), dtype)
+    tau = jnp.asarray(0.01, dtype)
+    sigma = jnp.asarray(0.01, dtype)
+    return prob, (x0, x0, y0, tau, sigma)
+
+
+def _run_steps(step, prob, state, k):
+    x, x_bar, y, tau, sigma = state
+    for _ in range(k):
+        x, x_bar, y, tau, sigma = step(prob.K, prob.b, prob.c, prob.lb,
+                                       prob.ub, prob.T, prob.Sigma,
+                                       x, x_bar, y, tau, sigma)
+    return x, x_bar, y, tau, sigma
+
+
+def _state_arrays(state):
+    return {k: np.asarray(v) for k, v in
+            zip(("x", "x_bar", "y", "tau", "sigma"), state)}
+
+
+def test_restore_reproduces_exact_iterate_stream(x64, tmp_path):
+    """snapshot at step 3 of 6 -> restore -> the remaining iterates are
+    bitwise-identical to the uninterrupted stream."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lp = random_standard_lp(12, 20, seed=7)
+    step = make_dist_step(mesh, n_inner=1)
+    prob, state0 = _dist_state(lp, mesh)
+
+    mid = _run_steps(step, prob, state0, 3)
+    path = str(tmp_path / "mid.npz")
+    save_checkpoint(path, 3, _state_arrays(mid))
+    final_uninterrupted = _run_steps(step, prob, mid, 3)
+
+    ck = load_checkpoint(path)
+    placed = reshard(ck.arrays, mesh,
+                     {"x": P("model"), "x_bar": P("model"),
+                      "y": P("data"), "tau": P(), "sigma": P()})
+    restored = (placed["x"], placed["x_bar"], placed["y"],
+                placed["tau"], placed["sigma"])
+    final_restored = _run_steps(step, prob, restored, 3)
+
+    for name, a, b in zip(("x", "x_bar", "y", "tau", "sigma"),
+                          final_uninterrupted, final_restored):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+
+
+def test_elastic_remesh_restore_smaller_mesh_identical_iterates(x64,
+                                                                tmp_path):
+    """Snapshot on the full local mesh, restore onto a 1x1 mesh: the
+    continued iterate streams match (bitwise when both meshes are 1x1;
+    to f64 round-off when the big mesh really shards, since psum
+    grouping differs)."""
+    big = make_local_mesh()                        # all local devices
+    small = make_mesh((1, 1), ("data", "model"))
+    # dims divisible by any local mesh shape (device counts are powers
+    # of two here), so padding is identical on both meshes
+    lp = random_standard_lp(16, 32, seed=9)
+    step_big = make_dist_step(big, n_inner=1)
+    step_small = make_dist_step(small, n_inner=1)
+    prob_big, state0 = _dist_state(lp, big)
+    prob_small, _ = _dist_state(lp, small)
+    assert prob_big.b.shape == prob_small.b.shape  # no mesh-dependent pad
+
+    mid = _run_steps(step_big, prob_big, state0, 3)
+    path = str(tmp_path / "mid.npz")
+    save_checkpoint(path, 3, _state_arrays(mid),
+                    {"mesh": list(big.devices.shape)})
+
+    on_big = _run_steps(step_big, prob_big, mid, 3)
+    ck = load_checkpoint(path)
+    placed = reshard(ck.arrays, small,
+                     {"x": P("model"), "x_bar": P("model"),
+                      "y": P("data"), "tau": P(), "sigma": P()})
+    on_small = _run_steps(
+        step_small, prob_small,
+        (placed["x"], placed["x_bar"], placed["y"], placed["tau"],
+         placed["sigma"]), 3)
+
+    bitwise = big.devices.size == 1
+    for name, a, b in zip(("x", "x_bar", "y", "tau", "sigma"),
+                          on_big, on_small):
+        a, b = np.asarray(a), np.asarray(b)
+        if bitwise:
+            assert np.array_equal(a, b), name
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12,
+                                       err_msg=name)
+
+
+def test_snapshot_is_valid_solver_state_for_survivors(x64, tmp_path):
+    """Straggler mitigation: a snapshot restored onto a FRESH mesh (the
+    survivors after dropping a worker group) continues without
+    algorithmic penalty — the continued stream equals the original's."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lp = random_standard_lp(8, 12, seed=2)
+    step = make_dist_step(mesh, n_inner=2)
+    prob, state0 = _dist_state(lp, mesh)
+    mid = _run_steps(step, prob, state0, 2)
+    path = str(tmp_path / "drop.npz")
+    save_checkpoint(path, 2, _state_arrays(mid))
+
+    # "survivors": a brand-new mesh + freshly sharded problem, as after
+    # an elastic restart of the job
+    mesh2 = make_mesh((1, 1), ("data", "model"))
+    step2 = make_dist_step(mesh2, n_inner=2)
+    prob2, _ = _dist_state(lp, mesh2)
+    ck = load_checkpoint(path)
+    placed = reshard(ck.arrays, mesh2,
+                     {"x": P("model"), "x_bar": P("model"),
+                      "y": P("data"), "tau": P(), "sigma": P()})
+    a = _run_steps(step, prob, mid, 2)
+    b = _run_steps(step2, prob2,
+                   (placed["x"], placed["x_bar"], placed["y"],
+                    placed["tau"], placed["sigma"]), 2)
+    for name, u, v in zip(("x", "x_bar", "y", "tau", "sigma"), a, b):
+        assert np.array_equal(np.asarray(u), np.asarray(v)), name

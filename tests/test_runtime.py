@@ -89,6 +89,46 @@ def test_make_local_mesh_covers_all_devices():
     assert tuple(mesh.axis_names) == ("data", "model")
 
 
+def test_make_production_mesh_pod_axis_from_process_count(monkeypatch):
+    """Regression (ISSUE 5): ``multi_pod=True`` used to hard-code a
+    2-pod axis regardless of how many processes the cluster actually
+    has.  The pod axis must now derive from the process count (the old
+    2 survives only as the single-process dry-run default)."""
+    from repro.runtime import cluster, mesh as rmesh
+
+    # single process: legacy 2-pod dry-run grid
+    monkeypatch.setattr(cluster, "pod_count", lambda: 1)
+    assert rmesh._default_pod_count() == 2
+    # multi-process: one pod per process
+    for n in (2, 3, 8):
+        monkeypatch.setattr(cluster, "pod_count", lambda n=n: n)
+        assert rmesh._default_pod_count() == n
+    # the derived count reaches the mesh: with a shrunken per-pod grid
+    # the pod axis is exactly the process count (build it if this host
+    # has the devices; otherwise the capacity error must name it)
+    monkeypatch.setattr(cluster, "pod_count", lambda: 3)
+    try:
+        mesh = rmesh.make_production_mesh(multi_pod=True, grid=(1, 1))
+        assert tuple(mesh.devices.shape) == (3, 1, 1)
+        assert tuple(mesh.axis_names) == ("pod", "data", "model")
+    except RuntimeError as e:
+        assert "'pod': 3" in str(e)
+    # explicit override beats derivation
+    mesh1 = rmesh.make_production_mesh(multi_pod=True, pods=1, grid=(1, 1))
+    assert tuple(mesh1.devices.shape) == (1, 1, 1)
+
+
+def test_make_cluster_mesh_single_process_fallback():
+    """Single-process: a 1-pod mesh over all local devices, so callers
+    need no separate code path."""
+    from repro.runtime.mesh import make_cluster_mesh
+
+    mesh = make_cluster_mesh()
+    assert tuple(mesh.axis_names) == ("pod", "data", "model")
+    assert mesh.shape["pod"] == max(1, jax.process_count())
+    assert mesh.devices.size == len(jax.devices())
+
+
 @pytest.mark.slow
 def test_make_mesh_multidevice_subprocess():
     """make_mesh round-trips axis names/sizes on 8 fan-out CPU devices."""

@@ -3,18 +3,23 @@
 CI runs this right after the smoke stream benchmark:
 
   1. **Schema validation** — the candidate record must be
-     ``bench_stream/v3``: every serving path (dense batched /
-     per-instance, crossbar batched / per-instance, sparse batched +
-     its densified baseline, async + sync dispatch, per-pod routed
-     cluster serving) present with finite numeric
-     ``cold_s``/``warm_s``/``mvm_total``, plus the ``sparse``
-     host-memory summary and the ``cluster`` routing summary
+     ``bench_stream/v4``: every serving path (dense batched /
+     per-instance, crossbar batched / per-instance, the three sparse
+     backends — default ELL, nnz-bucketed BCOO, ELL + fused
+     multi-iteration megakernel — and the densified sparse baseline,
+     async + sync dispatch, per-pod routed cluster serving) present
+     with finite numeric ``cold_s``/``warm_s``/``mvm_total``, plus the
+     ``sparse`` host-memory summary and the ``cluster`` routing summary
      (non-empty routing table, per-pod throughput shares).
   2. **Regression gate** — the warm BUCKETED paths (the steady-state
      serving numbers) must not regress more than ``--max-regression``
      (default 2x) against the committed baseline
-     (``git show HEAD:BENCH_stream.json`` in CI).  v1/v2 baselines are
+     (``git show HEAD:BENCH_stream.json`` in CI).  v1-v3 baselines are
      accepted: only the path keys both records share are compared.
+  3. **Sparse-wins gate** — the acceptance criterion of the ELL
+     backend: the default sparse pipeline's warm serving must be at
+     least ``--min-sparse-speedup`` (default 1x) as fast as the
+     densified dense baseline on the same >=95%-sparse stream.
 
 Exit code 0 = pass; 1 = schema or regression failure (messages on
 stderr).
@@ -29,9 +34,9 @@ import json
 import math
 import sys
 
-SCHEMA = "bench_stream/v3"
+SCHEMA = "bench_stream/v4"
 
-# every serving path a v3 record must carry
+# every serving path a v4 record must carry
 REQUIRED_PATHS = (
     "exact_batched",
     "exact_per_instance",
@@ -39,6 +44,9 @@ REQUIRED_PATHS = (
     "crossbar_per_instance",
     "sparse_batched",
     "sparse_batched_dense",
+    "sparse_ell",
+    "sparse_bcoo",
+    "sparse_ell_mega",
     "exact_batched_async",
     "exact_batched_sync",
     "exact_routed",
@@ -46,7 +54,8 @@ REQUIRED_PATHS = (
 PATH_FIELDS = ("cold_s", "warm_s", "mvm_total")
 SPARSE_FIELDS = ("density", "host_stack_bytes_dense",
                  "host_stack_bytes_sparse", "host_mem_improvement",
-                 "speedup_warm")
+                 "speedup_warm", "speedup_warm_bcoo",
+                 "speedup_warm_ell_mega")
 CLUSTER_FIELDS = ("n_pods", "routing", "per_pod", "rerouted_buckets",
                   "max_rel_disagreement_vs_unrouted")
 PER_POD_FIELDS = ("n_buckets", "n_instances", "flops_cost", "flops_share",
@@ -55,7 +64,6 @@ PER_POD_FIELDS = ("n_buckets", "n_instances", "flops_cost", "flops_share",
 # warm steady-state serving paths gated against the committed baseline
 GUARDED_WARM_PATHS = ("exact_batched", "crossbar_batched", "sparse_batched",
                       "exact_routed")
-
 
 def _fail(msg: str) -> None:
     print(f"bench_guard: FAIL: {msg}", file=sys.stderr)
@@ -135,6 +143,19 @@ def check_regressions(candidate: dict, baseline: dict,
               "(schema migration?); regression gate skipped")
 
 
+def check_sparse_wins(candidate: dict, min_speedup: float) -> None:
+    """Acceptance criterion: sparse serving must not lose to densifying."""
+    dense = candidate["paths"]["sparse_batched_dense"]["warm_s"]
+    sparse = candidate["paths"]["sparse_batched"]["warm_s"]
+    speedup = dense / max(sparse, 1e-12)
+    status = "ok" if speedup >= min_speedup else "TOO SLOW"
+    print(f"bench_guard: sparse_batched warm {sparse:.3f}s vs densified "
+          f"{dense:.3f}s ({speedup:.2f}x) [{status}]")
+    if speedup < min_speedup:
+        _fail(f"sparse_batched warm is only {speedup:.2f}x the densified "
+              f"baseline (>= {min_speedup}x required)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--candidate", default="BENCH_stream.json",
@@ -144,6 +165,9 @@ def main(argv=None) -> int:
                          "regression gate and only validate schema)")
     ap.add_argument("--max-regression", type=float, default=2.0,
                     help="max allowed warm-time ratio candidate/baseline")
+    ap.add_argument("--min-sparse-speedup", type=float, default=1.0,
+                    help="min required densified/sparse warm-time ratio "
+                         "(0 disables the sparse-wins gate)")
     args = ap.parse_args(argv)
 
     with open(args.candidate) as f:
@@ -151,6 +175,8 @@ def main(argv=None) -> int:
     validate_schema(candidate)
     print(f"bench_guard: schema {SCHEMA} ok "
           f"({len(candidate['paths'])} paths)")
+    if args.min_sparse_speedup > 0:
+        check_sparse_wins(candidate, args.min_sparse_speedup)
 
     if args.baseline:
         with open(args.baseline) as f:

@@ -20,13 +20,17 @@ Each timed path runs twice: COLD includes compilation, WARM is the
 steady-state serving cost (the number that matters for throughput).
 ``--kernel`` selects the engine's update backend (jnp vs fused Pallas).
 Besides the full record, every run emits ``BENCH_stream.json`` at the
-repo root (schema ``bench_stream/v3``: per-path warm/cold seconds +
-device-MVM totals — including the sparse COO pipeline, the
-async-vs-sync dispatch split and the per-pod ROUTED cluster path — plus
-a ``sparse`` host-memory summary and a ``cluster`` summary with the
-routing table and per-pod throughput shares) as the perf baseline for
-future PRs; CI uploads it and ``benchmarks/bench_guard.py`` gates
-regressions against it.
+repo root (schema ``bench_stream/v4``: per-path warm/cold seconds +
+device-MVM totals — including the three sparse backends (``sparse_ell``
+= the default row-blocked ELL pipeline, ``sparse_bcoo`` = nnz-bucketed
+COO, ``sparse_ell_mega`` = ELL with the fused multi-iteration
+megakernel), the async-vs-sync dispatch split and the per-pod ROUTED
+cluster path — plus a ``sparse`` host-memory summary and a ``cluster``
+summary with the routing table and per-pod throughput shares) as the
+perf baseline for future PRs; CI uploads it and
+``benchmarks/bench_guard.py`` gates regressions against it, including
+the acceptance-criterion gate that the default sparse pipeline's warm
+serving is at least as fast as the densified baseline.
 """
 from __future__ import annotations
 
@@ -78,18 +82,18 @@ def bench_exact(lps, opts):
         return results
 
     timings = {}
-    t0 = time.time(); loop_results = per_instance()
-    timings["per_instance_cold_s"] = time.time() - t0
-    t0 = time.time(); loop_results = per_instance()
-    timings["per_instance_warm_s"] = time.time() - t0
+    t0 = time.perf_counter(); loop_results = per_instance()
+    timings["per_instance_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); loop_results = per_instance()
+    timings["per_instance_warm_s"] = time.perf_counter() - t0
 
     solver = BatchSolver(opts)
-    t0 = time.time(); results = solver.solve_stream(lps)
-    timings["batched_cold_s"] = time.time() - t0
-    t0 = time.time(); solver.solve_stream(lps)
-    timings["batched_warm_s"] = time.time() - t0
+    t0 = time.perf_counter(); results = solver.solve_stream(lps)
+    timings["batched_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); solver.solve_stream(lps)
+    timings["batched_warm_s"] = time.perf_counter() - t0
 
-    gaps = [abs(r.obj - lp.obj_opt) / abs(lp.obj_opt)
+    gaps = [abs(r.obj - lp.obj_opt) / max(abs(lp.obj_opt), 1e-12)
             for lp, r in zip(lps, results)]
     return {
         **timings,
@@ -108,34 +112,52 @@ def bench_exact(lps, opts):
 
 
 def bench_sparse(lps, opts):
-    """Sparse COO pipeline vs. the densified dense pipeline on the SAME
-    >=95%-sparse stream.
+    """Sparse serving backends vs. the densified dense pipeline on the
+    SAME >=95%-sparse stream.
 
     The dense baseline pads every instance into its (B, m_pad, n_pad)
     bucket stack — exactly what serving sparse traffic without the
     sparse path costs; ``host_stack_bytes`` records what each path
-    actually materialized on the host.
+    actually materialized on the host.  Three sparse variants run:
+
+      - ``sparse_*``      the default pipeline (= the ELL backend; the
+                          steady-state serving number the guard gates)
+      - ``bcoo_*``        the nnz-bucketed BCOO backend (memory-optimal,
+                          scatter-bound on CPU)
+      - ``ell_mega_*``    the ELL backend with the fused multi-iteration
+                          megakernel (``check_every`` PDHG steps per
+                          launch, residual check hoisted out)
     """
+    import dataclasses
+
     from repro.runtime import BatchSolver
 
     dense_lps = [lp.densified() for lp in lps]
 
+    def timed(solver, stream, tag, timings):
+        t0 = time.perf_counter(); out = solver.solve_stream(stream)
+        timings[f"{tag}_cold_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter(); out = solver.solve_stream(stream)
+        timings[f"{tag}_warm_s"] = time.perf_counter() - t0
+        return out
+
     timings = {}
     solver_d = BatchSolver(opts)
-    t0 = time.time(); dense_results = solver_d.solve_stream(dense_lps)
-    timings["dense_cold_s"] = time.time() - t0
-    t0 = time.time(); dense_results = solver_d.solve_stream(dense_lps)
-    timings["dense_warm_s"] = time.time() - t0
+    dense_results = timed(solver_d, dense_lps, "dense", timings)
     dense_stats = dict(solver_d.last_stream_stats)
 
+    assert opts.sparse_kernel == "ell"      # default pipeline == ELL
     solver_s = BatchSolver(opts)
-    t0 = time.time(); results = solver_s.solve_stream(lps)
-    timings["sparse_cold_s"] = time.time() - t0
-    t0 = time.time(); results = solver_s.solve_stream(lps)
-    timings["sparse_warm_s"] = time.time() - t0
+    results = timed(solver_s, lps, "sparse", timings)
     sparse_stats = dict(solver_s.last_stream_stats)
 
-    gaps = [abs(r.obj - lp.obj_opt) / abs(lp.obj_opt)
+    solver_b = BatchSolver(dataclasses.replace(opts, sparse_kernel="bcoo"))
+    bcoo_results = timed(solver_b, lps, "bcoo", timings)
+
+    solver_m = BatchSolver(dataclasses.replace(opts, megakernel=True))
+    mega_results = timed(solver_m, lps, "ell_mega", timings)
+
+    gaps = [abs(r.obj - lp.obj_opt) / max(abs(lp.obj_opt), 1e-12)
             for lp, r in zip(lps, results)]
     mem_dense = dense_stats["dense_stack_bytes"]
     mem_sparse = sparse_stats["sparse_stack_bytes"]
@@ -143,6 +165,10 @@ def bench_sparse(lps, opts):
         **timings,
         "speedup_warm": timings["dense_warm_s"]
         / max(timings["sparse_warm_s"], 1e-12),
+        "speedup_warm_bcoo": timings["dense_warm_s"]
+        / max(timings["bcoo_warm_s"], 1e-12),
+        "speedup_warm_ell_mega": timings["dense_warm_s"]
+        / max(timings["ell_mega_warm_s"], 1e-12),
         "density": float(np.mean([lp.K.density for lp in lps])),
         "nnz_total": int(sum(lp.K.nnz for lp in lps)),
         "host_stack_bytes_dense": int(mem_dense),
@@ -153,8 +179,16 @@ def bench_sparse(lps, opts):
         "max_rel_disagreement_vs_dense": float(max(
             abs(r.obj - dr.obj) / max(abs(dr.obj), 1e-12)
             for r, dr in zip(results, dense_results))),
+        "max_rel_disagreement_bcoo_vs_ell": float(max(
+            abs(br.obj - r.obj) / max(abs(r.obj), 1e-12)
+            for br, r in zip(bcoo_results, results))),
+        "max_rel_disagreement_mega_vs_ell": float(max(
+            abs(mr.obj - r.obj) / max(abs(r.obj), 1e-12)
+            for mr, r in zip(mega_results, results))),
         "mvm_total_sparse": int(sum(r.mvm_calls for r in results)),
         "mvm_total_dense": int(sum(r.mvm_calls for r in dense_results)),
+        "mvm_total_bcoo": int(sum(r.mvm_calls for r in bcoo_results)),
+        "mvm_total_ell_mega": int(sum(r.mvm_calls for r in mega_results)),
     }
 
 
@@ -166,16 +200,16 @@ def bench_async(lps, opts):
 
     timings = {}
     sync = BatchSolver(opts, async_dispatch=False)
-    t0 = time.time(); sync.solve_stream(lps)
-    timings["sync_cold_s"] = time.time() - t0
-    t0 = time.time(); r_sync = sync.solve_stream(lps)
-    timings["sync_warm_s"] = time.time() - t0
+    t0 = time.perf_counter(); sync.solve_stream(lps)
+    timings["sync_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); r_sync = sync.solve_stream(lps)
+    timings["sync_warm_s"] = time.perf_counter() - t0
 
     al = BatchSolver(opts)          # async is the default
-    t0 = time.time(); al.solve_stream(lps)
-    timings["async_cold_s"] = time.time() - t0
-    t0 = time.time(); r_async = al.solve_stream(lps)
-    timings["async_warm_s"] = time.time() - t0
+    t0 = time.perf_counter(); al.solve_stream(lps)
+    timings["async_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); r_async = al.solve_stream(lps)
+    timings["async_warm_s"] = time.perf_counter() - t0
 
     agree = max(abs(a.obj - s.obj) / max(abs(s.obj), 1e-12)
                 for a, s in zip(r_async, r_sync))
@@ -215,10 +249,10 @@ def bench_cluster(lps, opts, n_pods: int = 2):
     # cleans it up per stream (single-process virtual-pod mode)
     solver = ClusterBatchSolver(opts, pod=0, n_pods=n_pods, live_pods=1,
                                 straggler_timeout=30.0)
-    t0 = time.time(); results = solver.solve_stream(lps)
-    timings["routed_cold_s"] = time.time() - t0
-    t0 = time.time(); results = solver.solve_stream(lps)
-    timings["routed_warm_s"] = time.time() - t0
+    t0 = time.perf_counter(); results = solver.solve_stream(lps)
+    timings["routed_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); results = solver.solve_stream(lps)
+    timings["routed_warm_s"] = time.perf_counter() - t0
     st = solver.last_stream_stats
 
     # per-pod shares from the solver's own audit surface (the table the
@@ -242,8 +276,8 @@ def bench_cluster(lps, opts, n_pods: int = 2):
         d["flops_share"] = d["flops_cost"] / total_cost
         pod_solver = BatchSolver(opts)
         pod_solver.solve_stream(pod_instances[pod])          # compile
-        t0 = time.time(); pod_solver.solve_stream(pod_instances[pod])
-        d["warm_s"] = time.time() - t0
+        t0 = time.perf_counter(); pod_solver.solve_stream(pod_instances[pod])
+        d["warm_s"] = time.perf_counter() - t0
         d["instances_per_s_warm"] = d["n_instances"] / max(d["warm_s"],
                                                            1e-12)
 
@@ -284,18 +318,18 @@ def bench_device(lps, opts, device):
         return reports
 
     timings = {}
-    t0 = time.time(); loop_reports = per_instance()
-    timings["per_instance_cold_s"] = time.time() - t0
-    t0 = time.time(); loop_reports = per_instance()
-    timings["per_instance_warm_s"] = time.time() - t0
+    t0 = time.perf_counter(); loop_reports = per_instance()
+    timings["per_instance_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); loop_reports = per_instance()
+    timings["per_instance_warm_s"] = time.perf_counter() - t0
 
     solver = CrossbarBatchSolver(opts, device=device)
-    t0 = time.time(); reports = solver.solve_stream(lps)
-    timings["batched_cold_s"] = time.time() - t0
-    t0 = time.time(); reports = solver.solve_stream(lps)
-    timings["batched_warm_s"] = time.time() - t0
+    t0 = time.perf_counter(); reports = solver.solve_stream(lps)
+    timings["batched_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); reports = solver.solve_stream(lps)
+    timings["batched_warm_s"] = time.perf_counter() - t0
 
-    gaps = [abs(rep.result.obj - lp.obj_opt) / abs(lp.obj_opt)
+    gaps = [abs(rep.result.obj - lp.obj_opt) / max(abs(lp.obj_opt), 1e-12)
             for lp, rep in zip(lps, reports)]
     return {
         **timings,
@@ -389,7 +423,7 @@ def main(argv=None):
     # upload it as a stable-named artifact next to the full record and
     # ``bench_guard.py`` can gate schema + warm-path regressions on it.
     bench = {
-        "schema": "bench_stream/v3",
+        "schema": "bench_stream/v4",
         "kernel": args.kernel,
         "config": record["config"],
         "paths": {
@@ -411,6 +445,24 @@ def main(argv=None):
                 "cold_s": record["sparse"]["dense_cold_s"],
                 "warm_s": record["sparse"]["dense_warm_s"],
                 "mvm_total": record["sparse"]["mvm_total_dense"],
+            },
+            # the default sparse pipeline IS the ELL backend; the
+            # explicit entry keeps the backend comparison stable even
+            # if the default ever changes
+            "sparse_ell": {
+                "cold_s": record["sparse"]["sparse_cold_s"],
+                "warm_s": record["sparse"]["sparse_warm_s"],
+                "mvm_total": record["sparse"]["mvm_total_sparse"],
+            },
+            "sparse_bcoo": {
+                "cold_s": record["sparse"]["bcoo_cold_s"],
+                "warm_s": record["sparse"]["bcoo_warm_s"],
+                "mvm_total": record["sparse"]["mvm_total_bcoo"],
+            },
+            "sparse_ell_mega": {
+                "cold_s": record["sparse"]["ell_mega_cold_s"],
+                "warm_s": record["sparse"]["ell_mega_warm_s"],
+                "mvm_total": record["sparse"]["mvm_total_ell_mega"],
             },
             "exact_batched_async": {
                 "cold_s": record["async"]["async_cold_s"],
@@ -445,6 +497,9 @@ def main(argv=None):
             "host_mem_improvement":
                 record["sparse"]["host_mem_improvement"],
             "speedup_warm": record["sparse"]["speedup_warm"],
+            "speedup_warm_bcoo": record["sparse"]["speedup_warm_bcoo"],
+            "speedup_warm_ell_mega":
+                record["sparse"]["speedup_warm_ell_mega"],
         },
     }
     bench_out = os.path.join(os.path.dirname(os.path.dirname(
@@ -461,8 +516,12 @@ def main(argv=None):
               f" | cache {r['cache']}")
     r = record["sparse"]
     print(f"[sparse] dense warm {r['dense_warm_s']:.3f}s"
-          f" | sparse warm {r['sparse_warm_s']:.3f}s"
-          f" | speedup {r['speedup_warm']:.2f}x"
+          f" | ell warm {r['sparse_warm_s']:.3f}s"
+          f" ({r['speedup_warm']:.2f}x)"
+          f" | bcoo warm {r['bcoo_warm_s']:.3f}s"
+          f" ({r['speedup_warm_bcoo']:.2f}x)"
+          f" | ell+mega warm {r['ell_mega_warm_s']:.3f}s"
+          f" ({r['speedup_warm_ell_mega']:.2f}x)"
           f" | host stack {r['host_stack_bytes_dense']}B ->"
           f" {r['host_stack_bytes_sparse']}B"
           f" ({r['host_mem_improvement']:.1f}x smaller)"

@@ -46,6 +46,7 @@ from .residuals import kkt_residuals
 from .symblock import MODE_AX, MODE_ATY, matmul_accel
 
 KERNELS = ("jnp", "pallas")
+SPARSE_KERNELS = ("ell", "bcoo")
 
 
 # ---------------------------------------------------------------- state ---
@@ -69,11 +70,19 @@ class PDHGState(NamedTuple):
 class Operator(NamedTuple):
     """The two device MVMs of one iteration.  ``fwd(v, key) ~ K v`` (dual
     step), ``adj(v, key) ~ K^T v`` (primal step); ``key`` seeds per-MVM
-    read noise and may be ``None`` on noiseless backends."""
+    read noise and may be ``None`` on noiseless backends.
+
+    ``fuse(state, n_steps) -> (state', x_sum, y_sum)`` is the optional
+    megakernel hook: one launch running ``n_steps`` full PDHG half-steps
+    (the check-interval fusion window) and returning the new state plus
+    the window's ergodic sums.  ``pdhg_loop`` uses it in place of the
+    per-step ``fori_loop`` when present; only noiseless backends mount
+    it (no per-MVM keys can be split inside the kernel)."""
 
     fwd: Callable
     adj: Callable
     name: str = "dense"
+    fuse: Optional[Callable] = None
 
 
 class Updates(NamedTuple):
@@ -148,6 +157,35 @@ def sparse_operator(K_sp, sigma_read: float = 0.0) -> Operator:
     return Operator(fwd, adj, "sparse")
 
 
+def sparse_ell_operator(data_f, cols_f, data_a, cols_a,
+                        sigma_read: float = 0.0,
+                        use_pallas: Optional[bool] = None) -> Operator:
+    """Row-blocked ELL backend (``kernels.sparse_mvm``): the forward MVM
+    contracts the ELL form of K (data_f/cols_f, (m, Wf)), the adjoint a
+    separately stored ELL of K^T (data_a/cols_a, (n, Wa)) — both are
+    gather + axis-1 reductions, no scatter anywhere in the iteration.
+    The read-noise hook matches ``dense_operator`` exactly.
+
+    ``use_pallas=None`` auto-selects the vectorized jnp gather path on
+    CPU and the Pallas kernel on accelerators; pass True to force the
+    Pallas kernel (interpreted on CPU) for parity validation."""
+    from ..kernels import sparse_mvm as _ell  # deferred: keep core light
+
+    def fwd(v, key=None):
+        w = _ell.ell_matvec(data_f, cols_f, v, use_pallas=use_pallas)
+        if sigma_read > 0.0:
+            w = _read_noise(w, key, sigma_read)
+        return w
+
+    def adj(v, key=None):
+        w = _ell.ell_matvec(data_a, cols_a, v, use_pallas=use_pallas)
+        if sigma_read > 0.0:
+            w = _read_noise(w, key, sigma_read)
+        return w
+
+    return Operator(fwd, adj, "sparse_ell")
+
+
 def accel_operator(accel) -> Operator:
     """Host-loop backend over an encoded ``symblock.Accel`` handle (MVM
     stats feed the energy ledger; the backend brings its own physics)."""
@@ -218,6 +256,45 @@ def sharded_operator(K_loc, row_axis, col_axis) -> Operator:
         return jax.lax.psum(w.astype(v.dtype), row_axis)
 
     return Operator(fwd, adj, "sharded")
+
+
+# ------------------------------------------------- megakernel (fused) ---
+
+def make_fused_dense(K_fwd, K_adj, b, c, lb, ub, T, Sigma, gamma,
+                     interpret=None) -> Callable:
+    """``Operator.fuse`` hook for the dense backend: one
+    ``kernels.pdhg_megakernel`` launch per check-interval window.
+    Noiseless only — the caller guarantees ``sigma_read == 0``."""
+    from ..kernels import pdhg_megakernel as _mega  # deferred
+
+    def fuse(state: PDHGState, n_steps: int):
+        (x, x_prev, x_bar, y, tau, sigma, xs, ys) = _mega.fused_dense_steps(
+            K_fwd, K_adj, b, c, lb, ub, T, Sigma,
+            state.x, state.x_prev, state.x_bar, state.y,
+            state.tau, state.sigma,
+            n_steps=int(n_steps), gamma=float(gamma), interpret=interpret)
+        return (PDHGState(x=x, x_prev=x_prev, x_bar=x_bar, y=y,
+                          tau=tau, sigma=sigma), xs, ys)
+
+    return fuse
+
+
+def make_fused_ell(data_f, cols_f, data_a, cols_a, b, c, lb, ub, T,
+                   Sigma, gamma, interpret=None) -> Callable:
+    """``Operator.fuse`` hook for the ELL backend (same contract as
+    ``make_fused_dense``, operands in ELL form)."""
+    from ..kernels import pdhg_megakernel as _mega  # deferred
+
+    def fuse(state: PDHGState, n_steps: int):
+        (x, x_prev, x_bar, y, tau, sigma, xs, ys) = _mega.fused_ell_steps(
+            data_f, cols_f, data_a, cols_a, b, c, lb, ub, T, Sigma,
+            state.x, state.x_prev, state.x_bar, state.y,
+            state.tau, state.sigma,
+            n_steps=int(n_steps), gamma=float(gamma), interpret=interpret)
+        return (PDHGState(x=x, x_prev=x_prev, x_bar=x_bar, y=y,
+                          tau=tau, sigma=sigma), xs, ys)
+
+    return fuse
 
 
 # ------------------------------------------------------ update backends ---
@@ -311,7 +388,8 @@ def draw_init(key, m: int, n: int, lb, ub, dtype):
 def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
               x0, y0, tau0, sigma0, key, *,
               max_iters: int, tol: float, gamma: float, check_every: int,
-              restart_beta: float, residual_fn: Optional[Callable] = None):
+              restart_beta: float, restart: bool = True,
+              residual_fn: Optional[Callable] = None):
     """The jitted solve loop every non-host path runs: ``check_every``
     fused iterations per ``lax.while_loop`` body, then one residual check
     on the current AND ergodic-average iterates with a PDLP-style
@@ -321,7 +399,18 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
     the solve — 4 device MVMs per check with fresh keys (k3/k4 current,
     k5/k6 averaged; reusing them would correlate read noise between the
     two residual evaluations), matching the host driver and the energy
-    ledger's 4-MVMs-per-check charge.
+    ledger's 4-MVMs-per-check charge.  ``restart=False`` (a STATIC
+    Python bool) removes the entire averaged-iterate block from the
+    trace: no ergodic-average residual MVMs (checks drop to 2 MVMs —
+    ``mvm_accounting`` mirrors this) and the averaged iterate is never
+    adopted.  With noiseless operators the surviving iterates are
+    bit-for-bit those of ``restart_beta = 0.0`` with restarts on, minus
+    that trick's reliance on ``0.0 * inf == NaN`` comparing false.
+
+    When ``op.fuse`` is mounted (megakernel mode), each check-interval
+    window runs as ONE fused launch instead of ``check_every`` stepped
+    launches; the check itself stays out here, so fused and unfused
+    loops visit the same check points on the same iterates.
 
     ``residual_fn(x, x_prev, y, Kx, KTy) -> scalar merit`` defaults to
     the dense KKT residual max; the distributed path passes its
@@ -344,36 +433,44 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
 
     def body(loop):
         state, it, merit, xs, ys, cnt, m_restart, rk = loop
-        state, xs, ys, cnt, rk = jax.lax.fori_loop(
-            0, check_every, half_iter, (state, xs, ys, cnt, rk))
+        if op.fuse is not None:
+            # megakernel window: one fused launch, no per-step keys
+            # (fused backends are noiseless, so none are consumed)
+            state, dxs, dys = op.fuse(state, check_every)
+            xs, ys = xs + dxs, ys + dys
+            cnt = cnt + jnp.asarray(check_every, cnt.dtype)
+        else:
+            state, xs, ys, cnt, rk = jax.lax.fori_loop(
+                0, check_every, half_iter, (state, xs, ys, cnt, rk))
         rk, k3, k4 = jax.random.split(rk, 3)
         merit = residual_fn(state.x, state.x_prev, state.y,
                             op.fwd(state.x, k3), op.adj(state.y, k4))
-        x_avg = xs / jnp.maximum(cnt, 1.0)
-        y_avg = ys / jnp.maximum(cnt, 1.0)
-        rk, k5, k6 = jax.random.split(rk, 3)
-        merit_avg = residual_fn(x_avg, x_avg, y_avg,
-                                op.fwd(x_avg, k5), op.adj(y_avg, k6))
-        do_restart = merit_avg < restart_beta * m_restart
-        use_avg = jnp.logical_or(
-            jnp.logical_and(do_restart, merit_avg < merit),
-            merit_avg <= tol,  # adopt the average if it already satisfies tol
-        )
-        pick = lambda a, cur: jnp.where(use_avg, a, cur)  # noqa: E731
-        state = state._replace(
-            x=pick(x_avg, state.x), x_prev=pick(x_avg, state.x_prev),
-            x_bar=pick(x_avg, state.x_bar), y=pick(y_avg, state.y))
-        m_restart = jnp.where(do_restart, jnp.minimum(merit_avg, merit),
-                              m_restart)
-        xs = jnp.where(do_restart, jnp.zeros_like(xs), xs)
-        ys = jnp.where(do_restart, jnp.zeros_like(ys), ys)
-        cnt = jnp.where(do_restart, 0.0, cnt)
-        # the carried merit must be the merit of the iterate actually
-        # CARRIED: min(merit, merit_avg) used to adopt the averaged
-        # iterate's (lower) merit even when the state kept the current
-        # iterate, so exits reported a residual the returned solution
-        # does not satisfy.
-        merit = jnp.where(use_avg, merit_avg, merit)
+        if restart:
+            x_avg = xs / jnp.maximum(cnt, 1.0)
+            y_avg = ys / jnp.maximum(cnt, 1.0)
+            rk, k5, k6 = jax.random.split(rk, 3)
+            merit_avg = residual_fn(x_avg, x_avg, y_avg,
+                                    op.fwd(x_avg, k5), op.adj(y_avg, k6))
+            do_restart = merit_avg < restart_beta * m_restart
+            use_avg = jnp.logical_or(
+                jnp.logical_and(do_restart, merit_avg < merit),
+                merit_avg <= tol,  # adopt the average if it satisfies tol
+            )
+            pick = lambda a, cur: jnp.where(use_avg, a, cur)  # noqa: E731
+            state = state._replace(
+                x=pick(x_avg, state.x), x_prev=pick(x_avg, state.x_prev),
+                x_bar=pick(x_avg, state.x_bar), y=pick(y_avg, state.y))
+            m_restart = jnp.where(do_restart,
+                                  jnp.minimum(merit_avg, merit), m_restart)
+            xs = jnp.where(do_restart, jnp.zeros_like(xs), xs)
+            ys = jnp.where(do_restart, jnp.zeros_like(ys), ys)
+            cnt = jnp.where(do_restart, 0.0, cnt)
+            # the carried merit must be the merit of the iterate actually
+            # CARRIED: min(merit, merit_avg) used to adopt the averaged
+            # iterate's (lower) merit even when the state kept the
+            # current iterate, so exits reported a residual the returned
+            # solution does not satisfy.
+            merit = jnp.where(use_avg, merit_avg, merit)
         return (state, it + check_every, merit, xs, ys, cnt, m_restart, rk)
 
     def cond(loop):
@@ -400,28 +497,47 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     and ``kernel`` selects the update backend (jnp | pallas).
 
     ``operator`` swaps the MVM backend (e.g. the differential-pair
-    crossbar kernel) in place of the default dense one; the step-size
-    initialization, init draws, and option plumbing stay HERE either way.
-    ``K_fwd`` may be a ``jax.experimental.sparse`` matrix (BCOO/BCSR):
-    the default operator is then ``sparse_operator`` and ``K_adj`` is
-    ignored (the adjoint is a transpose view of the same nonzeros).
+    crossbar kernel or the row-blocked ELL operator) in place of the
+    default dense one — ``K_fwd``/``K_adj`` may then be ``None``; the
+    step-size initialization, init draws, and option plumbing stay HERE
+    either way (problem dims come from ``b``/``c``).  ``K_fwd`` may be
+    a ``jax.experimental.sparse`` matrix (BCOO/BCSR): the default
+    operator is then ``sparse_operator`` and ``K_adj`` is ignored (the
+    adjoint is a transpose view of the same nonzeros).
+
+    Trailing static entries past the original 9 are optional (older
+    9-tuples keep their exact semantics): ``restart`` (explicit restart
+    gate, default True), ``sparse_kernel`` (executable-cache
+    discriminator for the sparse backend — the stacking layer picks the
+    operator), ``megakernel`` (fuse each check window into one launch;
+    auto-mounted on the dense backend at ``sigma_read == 0``).
     """
     (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
-     sigma_read, kernel) = static
-    m, n = K_fwd.shape
+     sigma_read, kernel) = static[:9]
+    restart = bool(static[9]) if len(static) > 9 else True
+    megakernel = bool(static[11]) if len(static) > 11 else False
+    m, n = b.shape[0], c.shape[0]
+    # an all-zero operator (degenerate but legal: the optimum is just the
+    # box projection of -c's direction) has rho = 0; unguarded it makes
+    # tau0 = inf and NaNs the very first update
+    rho = jnp.maximum(rho, jnp.asarray(1e-12, b.dtype))
     tau0 = eta / (omega * rho)
     sigma0 = eta * omega / rho
-    key, x0, y0 = draw_init(key, m, n, lb, ub, K_fwd.dtype)
+    key, x0, y0 = draw_init(key, m, n, lb, ub, b.dtype)
     if operator is None:
         if hasattr(K_fwd, "todense"):   # JAXSparse (BCOO/BCSR), not ndarray
             operator = sparse_operator(K_fwd, sigma_read)
         else:
             operator = dense_operator(K_fwd, K_adj, sigma_read)
+    if (megakernel and operator.fuse is None and sigma_read == 0.0
+            and operator.name == "dense"):
+        operator = operator._replace(fuse=make_fused_dense(
+            K_fwd, K_adj, b, c, lb, ub, T, Sigma, gamma))
     return pdhg_loop(
         operator, make_updates(kernel),
         b, c, lb, ub, T, Sigma, x0, y0, tau0, sigma0, key,
         max_iters=max_iters, tol=tol, gamma=gamma, check_every=check_every,
-        restart_beta=restart_beta,
+        restart_beta=restart_beta, restart=restart,
     )
 
 
@@ -436,10 +552,11 @@ def lemma2_margin(rho, sigma_read: float):
 
 
 def mvm_accounting(iterations: int, check_every: int,
-                   lanczos_iters: int) -> int:
+                   lanczos_iters: int, restart: bool = True) -> int:
     """Device-MVM total for the energy ledger, shared by every jitted
     path: Lanczos (1 MVM/iter; 0 under ``norm_override``) + PDHG (2/iter)
     + residual checks (4 per check: x/y pair for the current AND the
-    averaged iterate — the jitted body always evaluates both)."""
+    averaged iterate; with restarts gated off the averaged pair is never
+    evaluated, so checks charge 2)."""
     n_checks = max(1, iterations // max(1, check_every))
-    return lanczos_iters + 2 * iterations + 4 * n_checks
+    return lanczos_iters + 2 * iterations + (4 if restart else 2) * n_checks

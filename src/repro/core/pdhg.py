@@ -65,11 +65,18 @@ class PDHGOptions:
     track_history: bool = False
     norm_override: Optional[float] = None  # skip Lanczos (reuse across runs)
     kernel: str = "jnp"            # update backend: "jnp" | "pallas" (fused)
+    sparse_kernel: str = "ell"     # sparse operator backend: "ell"
+    #                                (row-blocked ELL gather kernel; the
+    #                                wall-clock path) | "bcoo" (COO/BCOO
+    #                                scatter; the memory-optimal path)
+    megakernel: bool = False       # fuse each check_every window into ONE
+    #                                kernel launch (noiseless paths only)
 
 
 @dataclasses.dataclass
 class PDHGResult:
-    status: str                 # "optimal" | "iteration_limit" | "infeasible?"
+    status: str                 # "optimal" | "iteration_limit" |
+    #                             "diverged" | "primal_infeasible"
     x: np.ndarray               # solution in ORIGINAL (unscaled) coordinates
     y: np.ndarray
     obj: float
@@ -216,6 +223,12 @@ def solve(
                 )
             if on_iteration is not None:
                 on_iteration(it + 1, merit, accel)
+            if not np.isfinite(merit):
+                # NaN/inf merit: the iterate blew up.  NaN fails every
+                # comparison below, so without this check the loop would
+                # run to the iteration limit and report it as such.
+                status = "diverged"
+                break
             if merit <= opts.tol:
                 status = "optimal"
                 break
@@ -293,15 +306,27 @@ def opts_static(opts: PDHGOptions, sigma_read: float = 0.0) -> tuple:
     """The hashable option tuple ``engine.solve_core`` consumes
     (positional unpack — keep in sync with the head of that function, and
     nowhere else: ``solve_jit``, ``runtime.batch`` and
-    ``crossbar.solver`` all build it through here).  ``opts.kernel`` is
+    ``crossbar.solver`` all build it through here).  ``opts.kernel``,
+    ``opts.restart``, ``opts.sparse_kernel`` and ``opts.megakernel`` are
     part of the tuple, so compiled-executable caches keyed on it never
-    serve one update backend's executable to the other."""
+    serve one backend's executable to another.  ``opts.restart`` rides
+    as an explicit static boolean — the old encoding (restart off ==
+    ``restart_beta 0.0``) only worked because ``0.0 * inf`` is NaN and
+    NaN comparisons are false inside the jitted body."""
     if opts.kernel not in engine.KERNELS:
         raise ValueError(f"unknown update kernel {opts.kernel!r}; "
                          f"expected one of {engine.KERNELS}")
+    if opts.sparse_kernel not in engine.SPARSE_KERNELS:
+        raise ValueError(f"unknown sparse kernel {opts.sparse_kernel!r}; "
+                         f"expected one of {engine.SPARSE_KERNELS}")
+    if opts.megakernel and float(sigma_read) > 0.0:
+        raise ValueError("megakernel mode is noiseless-only: per-MVM "
+                         "read-noise keys cannot be split inside a fused "
+                         "launch (sigma_read must be 0)")
     return (opts.max_iters, opts.tol, opts.eta, opts.omega, opts.gamma,
-            opts.check_every, opts.restart_beta if opts.restart else 0.0,
-            float(sigma_read), opts.kernel)
+            opts.check_every, opts.restart_beta, float(sigma_read),
+            opts.kernel, bool(opts.restart), opts.sparse_kernel,
+            bool(opts.megakernel))
 
 
 # Backwards-compatible alias: the dense jit core now lives in the engine.
@@ -345,12 +370,22 @@ def solve_jit(
     )
     it_i = int(it)
     lanczos_mvms = 0 if opts.norm_override is not None else opts.lanczos_iters
+    merit_f = float(merit)
+    # a non-finite merit exits the while_loop (NaN > tol is false) —
+    # report it as divergence, not as a clean iteration limit
+    if not np.isfinite(merit_f):
+        status = "diverged"
+    elif merit_f <= opts.tol:
+        status = "optimal"
+    else:
+        status = "iteration_limit"
     return PDHGResult(
-        status="optimal" if float(merit) <= opts.tol else "iteration_limit",
+        status=status,
         x=x_orig, y=y_orig, obj=float(lp.c @ x_orig),
         iterations=it_i, residuals=res, sigma_max=float(rho),
         lanczos_iters=lanczos_mvms,
         mvm_calls=engine.mvm_accounting(it_i, opts.check_every,
-                                        lanczos_mvms),
-        merit=float(merit),
+                                        lanczos_mvms,
+                                        restart=opts.restart),
+        merit=merit_f,
     )

@@ -218,7 +218,8 @@ class CrossbarBatchSolver(BatchSolver):
                                 pairs_logical=(m + n) ** 2,
                                 pairs_total=pairs_total)
             pdhg_mvms = engine.mvm_accounting(
-                it, self.opts.check_every, 0)
+                it, self.opts.check_every, 0,
+                restart=self.opts.restart)
             active_cells = 2.0 * pairs_total * fill
             _charge_reads(ledger, self.device, lanczos_mvms + pdhg_mvms,
                           active_cells)
@@ -227,9 +228,14 @@ class CrossbarBatchSolver(BatchSolver):
                 jnp.asarray(lp.c), jnp.asarray(lp.b),
                 jnp.asarray(lp.K @ x), jnp.asarray(lp.K.T @ y),
                 lb=jnp.asarray(lp.lb), ub=jnp.asarray(lp.ub))
+            if not np.isfinite(merit):
+                status = "diverged"     # NaN merit: blow-up, not a limit
+            elif merit <= self.opts.tol:
+                status = "optimal"
+            else:
+                status = "iteration_limit"
             result = PDHGResult(
-                status="optimal" if merit <= self.opts.tol
-                else "iteration_limit",
+                status=status,
                 x=x, y=y, obj=float(lp.c @ x), iterations=it,
                 residuals=res, sigma_max=float(rhos[k]),
                 lanczos_iters=lanczos_mvms,

@@ -215,7 +215,7 @@ def solve_dist(
             opts.eta * opts.omega / rho, key,
             max_iters=opts.max_iters, tol=opts.tol, gamma=opts.gamma,
             check_every=opts.check_every,
-            restart_beta=opts.restart_beta if opts.restart else 0.0,
+            restart_beta=opts.restart_beta, restart=opts.restart,
             residual_fn=residual_fn,
         )
 
@@ -245,14 +245,22 @@ def solve_dist(
         lb=jnp.asarray(lp.lb), ub=jnp.asarray(lp.ub))
     it_i = int(it)
     lanczos_mvms = 0 if opts.norm_override is not None else opts.lanczos_iters
+    merit_f = float(merit)
+    if not np.isfinite(merit_f):
+        status = "diverged"          # NaN exits the loop; report it truly
+    elif merit_f <= opts.tol:
+        status = "optimal"
+    else:
+        status = "iteration_limit"
     return PDHGResult(
-        status="optimal" if float(merit) <= opts.tol else "iteration_limit",
+        status=status,
         x=x_orig, y=y_orig, obj=float(lp.c @ x_orig),
         iterations=it_i, residuals=res_obj, sigma_max=rho,
         lanczos_iters=lanczos_mvms,
         mvm_calls=engine.mvm_accounting(it_i, opts.check_every,
-                                        lanczos_mvms),
-        merit=float(merit),
+                                        lanczos_mvms,
+                                        restart=opts.restart),
+        merit=merit_f,
     )
 
 

@@ -1,0 +1,186 @@
+"""Row-blocked ELL sparse MVM kernel (Pallas) + host-side COO->ELL.
+
+The sparse COO path is memory-optimal but loses on wall clock: every
+MVM is a scatter-add over (nnz,) gathers, which XLA CPU serializes, and
+every Ruiz/Pock-Chambolle reduction is another scatter.  ELL
+(ELLPACK) trades a bounded amount of padding for fully vectorized
+row-major access:
+
+    data (m, W) float   row i's nonzero values, zero-padded to width W
+    cols (m, W) int32   matching column indices (padding points at 0)
+
+so one MVM is a dense gather + axis-1 reduction,
+
+    w[i] = sum_j data[i, j] * v[cols[i, j]]
+
+with no scatter anywhere.  Padding entries carry data == 0, so whatever
+``cols`` says for them (index 0 by convention) contributes nothing —
+exactly the inertness contract of ``stack_problems_sparse``'s (0, 0)
+padding.  The row dimension blocks in ``ROW_BLOCK`` chunks aligned with
+the crossbar tile edge (``crossbar_mvm.TILE_R``), so an ELL operator
+occupies the same logical row tiling as the programmed array it models.
+
+Two execution paths, one rule (``kernels.interpret``): on CPU the
+vectorized gather/segment-sum jnp expression IS the kernel (running the
+Pallas kernel interpreted would only add overhead); on an accelerator
+backend the row-blocked Pallas kernel runs compiled, the input vector
+resident in VMEM across all row blocks.  ``use_pallas=True`` forces the
+Pallas kernel (interpreted on CPU) for parity testing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .interpret import resolve_interpret
+
+# Row-block edge: matches crossbar_mvm.TILE_R so ELL row blocks and
+# crossbar tiles describe the same physical row partitioning.
+ROW_BLOCK = 128
+# Smallest ELL width bucket (power-of-two bucketing, like nnz_bucket).
+MIN_ELL_WIDTH = 4
+
+
+# ------------------------------------------------------ host conversion ---
+
+def ell_width_bucket(width: int, min_size: int = MIN_ELL_WIDTH) -> int:
+    """Round an ELL width up to its power-of-two bucket so repeat sparse
+    traffic with drifting row occupancy reuses compiled executables
+    (the ELL twin of ``runtime.batch.nnz_bucket``)."""
+    return max(min_size, 1 << (max(int(width), 1) - 1).bit_length())
+
+
+def coo_row_widths(row, col, data, shape: Tuple[int, int]) -> Tuple[int, int]:
+    """(max nonzeros per row, max nonzeros per column) of a COO triplet,
+    counting only true nonzeros — explicit zeros (nnz padding at (0, 0)
+    included) never widen the ELL form."""
+    data = np.asarray(data).reshape(-1)
+    keep = data != 0
+    row = np.asarray(row).reshape(-1)[keep]
+    col = np.asarray(col).reshape(-1)[keep]
+    m, n = shape
+    wf = int(np.bincount(row, minlength=max(m, 1)).max()) if m else 0
+    wa = int(np.bincount(col, minlength=max(n, 1)).max()) if n else 0
+    return wf, wa
+
+
+def ell_from_coo(data, row, col, shape: Tuple[int, int],
+                 width: Optional[int] = None):
+    """Host-side COO -> ELL conversion (numpy).
+
+    Drops explicit zero entries first (they carry no information and
+    would only widen rows), then packs each row's nonzeros
+    left-justified in column-sorted order.  Returns ``(ell_data (m, W),
+    ell_cols (m, W) int32)`` with ``W = width`` (must cover the widest
+    row) or the exact max row width when ``width`` is None.  Rows with
+    no nonzeros — including every row of an all-zero K — come back fully
+    padded (data 0, cols 0), which the matvec treats as inert.
+    """
+    m, n = int(shape[0]), int(shape[1])
+    data = np.asarray(data).reshape(-1)
+    keep = data != 0
+    data = data[keep]
+    row = np.asarray(row, np.int64).reshape(-1)[keep]
+    col = np.asarray(col, np.int64).reshape(-1)[keep]
+    order = np.lexsort((col, row))
+    data, row, col = data[order], row[order], col[order]
+    counts = np.bincount(row, minlength=max(m, 1))[:max(m, 1)]
+    w_need = int(counts.max()) if m else 0
+    W = w_need if width is None else int(width)
+    assert W >= w_need, (W, w_need)
+    ell_data = np.zeros((m, W), data.dtype)
+    ell_cols = np.zeros((m, W), np.int32)
+    if data.size:
+        # position of each entry within its row (entries are row-sorted)
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        pos = np.arange(data.size) - np.repeat(starts, counts)
+        ell_data[row, pos] = data
+        ell_cols[row, pos] = col
+    return ell_data, ell_cols
+
+
+# ------------------------------------------------------------- reference ---
+
+def ell_matvec_ref(data, cols, v):
+    """Vectorized gather/segment-sum ELL matvec — the CPU/interpret
+    path.  One (m, W) gather + one axis-1 reduction; no scatter."""
+    if data.shape[1] == 0:
+        return jnp.zeros(data.shape[0], v.dtype)
+    return jnp.sum(data * jnp.take(v, cols, axis=0), axis=1)
+
+
+# --------------------------------------------------------- Pallas kernel ---
+
+def _ell_kernel(d_ref, c_ref, v_ref, out_ref):
+    d = d_ref[...]                                   # (ROW_BLOCK, W)
+    c = c_ref[...]
+    v = v_ref[...][:, 0]                             # (n,) resident in VMEM
+    g = jnp.take(v, c, axis=0)                       # row-block gather
+    # accumulate at least f32, never BELOW the data dtype (matches
+    # crossbar_mvm: x64 interpret validation must not round through f32)
+    acc_dt = jnp.promote_types(d.dtype, jnp.float32)
+    w = jnp.sum((d * g).astype(acc_dt), axis=1)
+    out_ref[...] = w.reshape(-1, 1).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ell_matvec_padded(data, cols, v, *, interpret: bool | None = None):
+    """Row-blocked Pallas ELL matvec on row-aligned inputs.
+
+    data/cols: (R, W) with R a multiple of ``ROW_BLOCK``; v: (n, 1).
+    Returns (R, 1).  The full input vector is a VMEM-resident block for
+    every grid step ("broadcast the input voltages"), each grid step
+    owns one row block — the sparse analogue of ``crossbar_mvm``'s
+    row-tile accumulation, with the column loop replaced by the gather.
+    """
+    R, W = data.shape
+    assert R % ROW_BLOCK == 0, (R, ROW_BLOCK)
+    n = v.shape[0]
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=(R // ROW_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, W), lambda i: (i, 0)),   # data
+            pl.BlockSpec((ROW_BLOCK, W), lambda i: (i, 0)),   # cols
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),           # v (full)
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 1), data.dtype),
+        interpret=resolve_interpret(interpret),
+    )(data, cols, v)
+
+
+# ------------------------------------------------------------ public API ---
+
+def _pad_rows(a, mult):
+    size = a.shape[0]
+    target = ((size + mult - 1) // mult) * mult
+    if target == size:
+        return a
+    return jnp.pad(a, ((0, target - size), (0, 0)))
+
+
+def ell_matvec(data, cols, v, *, interpret=None,
+               use_pallas: Optional[bool] = None):
+    """``w = ELL(data, cols) @ v`` with arbitrary (m, W).
+
+    ``use_pallas=None`` auto-selects: the vectorized jnp gather path on
+    CPU (where Pallas would run interpreted anyway), the row-blocked
+    Pallas kernel on accelerator backends.  ``use_pallas=True`` forces
+    the Pallas kernel — interpreted on CPU — for parity validation.
+    """
+    if use_pallas is None:
+        use_pallas = not resolve_interpret(interpret)
+    if not use_pallas or data.shape[1] == 0:
+        return ell_matvec_ref(data, cols, v)
+    m = data.shape[0]
+    dp = _pad_rows(data, ROW_BLOCK)
+    cp = _pad_rows(cols, ROW_BLOCK)
+    out = ell_matvec_padded(dp, cp, v.reshape(-1, 1),
+                            interpret=resolve_interpret(interpret))
+    return out[:m, 0]

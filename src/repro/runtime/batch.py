@@ -28,11 +28,17 @@ are decorrelated across a bucket.
 Past toy sizes, two more concerns take over (ROADMAP item 2):
 
   * **Sparse streams.**  A ``StandardLP`` whose K is a ``SparseCOO``
-    routes through a dedicated sparse bucket pipeline: nonzeros are
-    padded to an nnz bucket and stacked as (B, nnz) data + (B, nnz, 2)
-    index arrays — never a dense (B, m_pad, n_pad) stack — and the
-    engine runs ``sparse_operator`` (BCOO contractions) with sparse Ruiz
-    equilibration, Pock–Chambolle diagonals and a matvec-only Lanczos.
+    routes through a dedicated sparse bucket pipeline selected by
+    ``PDHGOptions.sparse_kernel``.  The default ``"ell"`` backend
+    converts COO to row-blocked ELL — forward (B, m, Wf) AND adjoint
+    (B, n, Wa) layouts, widths power-of-two bucketed like ``nnz_bucket``
+    — so Ruiz equilibration, Pock–Chambolle diagonals, Lanczos and both
+    solve MVMs are gathers + axis-1 reductions with no scatter anywhere
+    (the wall-clock path; ``kernels.sparse_mvm``).  ``"bcoo"`` keeps the
+    nnz-proportional COO stacking ((B, nnz) data + (B, nnz, 2) indices,
+    ``engine.sparse_operator`` scatter contractions) — the
+    memory-optimal path.  Neither ever materializes a dense
+    (B, m_pad, n_pad) stack.
   * **Async serving.**  ``solve_stream`` submits EVERY bucket to its
     compiled executable first (JAX dispatch is asynchronous; the host
     never blocks between buckets) and only then collects results,
@@ -59,6 +65,12 @@ from ..core import engine
 from ..core.lanczos import lanczos_svd_jit_mv
 from ..core.pdhg import PDHGOptions
 from ..core.pdhg import opts_static  # noqa: F401  (canonical home; re-export)
+from ..kernels.sparse_mvm import (
+    coo_row_widths,
+    ell_from_coo,
+    ell_matvec,
+    ell_width_bucket,
+)
 from ..lp.problem import SparseCOO, StandardLP
 
 MIN_BUCKET = 8
@@ -185,6 +197,57 @@ def stack_problems_sparse(lps: Sequence[StandardLP],
             v = getattr(lp, f)
             arr[k, :v.shape[0]] = v
     return (data, idx, vecs["b"], vecs["c"], vecs["lb"], vecs["ub"])
+
+
+def stack_problems_ell(lps: Sequence[StandardLP],
+                       m: Optional[int] = None,
+                       n: Optional[int] = None,
+                       wf: Optional[int] = None,
+                       wa: Optional[int] = None) -> tuple:
+    """Stack sparse StandardLPs in row-blocked ELL form.
+
+    Returns ``(data_f (B, m, wf), cols_f (B, m, wf) int32,
+    data_a (B, n, wa), cols_a (B, n, wa) int32, b, c, lb, ub)``.
+    The forward layout is the ELL form of K, the adjoint layout the ELL
+    form of K^T — storing both keeps every pipeline reduction and both
+    solve MVMs scatter-free.  ``wf``/``wa`` default to the exact max
+    row/column occupancy over the list (buckets pass their power-of-two
+    widths explicitly).  ELL padding slots carry (data 0, col 0), the
+    same inertness contract as ``stack_problems_sparse``'s (0, 0)
+    entries; explicit zero nonzeros are dropped during conversion, so
+    they never widen a row.
+    """
+    assert lps and all(isinstance(lp.K, SparseCOO) for lp in lps), \
+        "stack_problems_ell needs SparseCOO operators"
+    m = m if m is not None else max(lp.K.shape[0] for lp in lps)
+    n = n if n is not None else max(lp.K.shape[1] for lp in lps)
+    if wf is None or wa is None:
+        widths = [coo_row_widths(lp.K.row, lp.K.col, lp.K.data,
+                                 lp.K.shape) for lp in lps]
+        wf = wf if wf is not None else max(w[0] for w in widths)
+        wa = wa if wa is not None else max(w[1] for w in widths)
+    B = len(lps)
+    dt = lps[0].K.dtype
+    data_f = np.zeros((B, m, wf), dt)
+    cols_f = np.zeros((B, m, wf), np.int32)
+    data_a = np.zeros((B, n, wa), dt)
+    cols_a = np.zeros((B, n, wa), np.int32)
+    vecs = {f: np.zeros((B, dim), dt)
+            for f, dim in (("b", m), ("c", n), ("lb", n), ("ub", n))}
+    for k, lp in enumerate(lps):
+        # coalesce first: ELL stores one slot per (row, col), so
+        # duplicates must merge for parity with the densified problem
+        K = lp.K.coalesce()
+        assert K.shape[0] <= m and K.shape[1] <= n, (K.shape, (m, n))
+        data_f[k], cols_f[k] = ell_from_coo(K.data, K.row, K.col,
+                                            (m, n), width=wf)
+        data_a[k], cols_a[k] = ell_from_coo(K.data, K.col, K.row,
+                                            (n, m), width=wa)
+        for f, arr in vecs.items():
+            v = getattr(lp, f)
+            arr[k, :v.shape[0]] = v
+    return (data_f, cols_f, data_a, cols_a,
+            vecs["b"], vecs["c"], vecs["lb"], vecs["ub"])
 
 
 # -------------------------------------------------------------- pipeline ---
@@ -340,6 +403,99 @@ def make_sparse_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
     return pipeline
 
 
+# ---------------------------------------------------------- ELL pipeline ---
+
+def _row_reduce(a, reduce_fn):
+    """axis-1 reduction of an (m, W) ELL value array, total-safe at
+    W == 0 (an all-zero operator's ELL form has zero width)."""
+    if a.shape[1] == 0:
+        return jnp.zeros(a.shape[0], a.dtype)
+    return reduce_fn(a, axis=1)
+
+
+def _prep_one_ell(df, cf, da, ca, b, c, lb, ub, opts: PDHGOptions):
+    """Sparse Ruiz + Pock–Chambolle diagonals on ELL nonzeros.
+
+    Mirrors ``_prep_one_sparse`` (same eps, same guard, same update
+    order — the scaling diagonals come out bit-identical), but every
+    row/column reduction is a vectorized axis-1 max/sum on the layout
+    that already has it contiguous: row stats on the forward ELL,
+    column stats on the adjoint ELL.  No scatter anywhere.  Padding
+    slots (data 0, col 0) scale to 0 and never move a max or a sum.
+    """
+    dt = df.dtype
+    eps = 1e-12
+    m, n = b.shape[0], c.shape[0]
+    D1 = jnp.ones(m, dt)
+    D2 = jnp.ones(n, dt)
+    sf, sa = df, da
+    for _ in range(opts.ruiz_iters):
+        r = jnp.sqrt(_row_reduce(jnp.abs(sf), jnp.max))
+        cc = jnp.sqrt(_row_reduce(jnp.abs(sa), jnp.max))
+        r = jnp.where(r < eps, 1.0, r)
+        cc = jnp.where(cc < eps, 1.0, cc)
+        D1 = D1 / r
+        D2 = D2 / cc
+        sf = df * D1[:, None] * D2[cf]
+        sa = da * D2[:, None] * D1[ca]
+    bs = D1 * b
+    cs = D2 * c
+    lbs = jnp.where(jnp.isfinite(lb), lb / D2, lb)
+    ubs = jnp.where(jnp.isfinite(ub), ub / D2, ub)
+    T = 1.0 / jnp.maximum(_row_reduce(jnp.abs(sa), jnp.sum), eps)
+    Sigma = 1.0 / jnp.maximum(_row_reduce(jnp.abs(sf), jnp.sum), eps)
+    return sf, sa, bs, cs, lbs, ubs, T, Sigma, D1, D2
+
+
+def make_ell_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
+    """vmapped ELL prep + solve over a stacked ELL bucket.
+
+    Inputs are the ``stack_problems_ell`` layout plus per-instance keys.
+    The operator-norm estimate runs a matvec-only Lanczos with two ELL
+    gathers per iteration; the solve mounts ``engine.sparse_ell_operator``
+    (``opts.megakernel`` additionally fuses each check window into one
+    ``kernels.pdhg_megakernel`` launch).  Like the COO pipeline, no
+    dense (m, n) array ever exists on host or device — but unlike it,
+    no iteration-path op is a scatter, which is what makes sparse win
+    on wall clock and not just memory.
+    """
+    static = opts_static(opts, sigma_read)
+
+    def one(df, cf, da, ca, b, c, lb, ub, key):
+        m, n = b.shape[0], c.shape[0]
+        (sf, sa, bs, cs, lbs, ubs, T, Sigma, D1, D2) = _prep_one_ell(
+            df, cf, da, ca, b, c, lb, ub, opts)
+        if opts.norm_override is not None:
+            rho = jnp.asarray(opts.norm_override, df.dtype)
+        else:
+            rtS, rtT = jnp.sqrt(Sigma), jnp.sqrt(T)
+            deff_f = sf * rtS[:, None] * rtT[cf]
+            deff_a = sa * rtT[:, None] * rtS[ca]
+
+            def mv(v):         # symmetric block M' of Keff, matvec-only
+                top = ell_matvec(deff_f, cf, v[m:])
+                bot = ell_matvec(deff_a, ca, v[:m])
+                return jnp.concatenate([top, bot])
+
+            rho = engine.lemma2_margin(
+                lanczos_svd_jit_mv(mv, m + n, df.dtype,
+                                   k_max=opts.lanczos_iters),
+                sigma_read)
+        op = engine.sparse_ell_operator(sf, cf, sa, ca, sigma_read)
+        if opts.megakernel and sigma_read == 0.0:
+            op = op._replace(fuse=engine.make_fused_ell(
+                sf, cf, sa, ca, bs, cs, lbs, ubs, T, Sigma, opts.gamma))
+        x, y, it, merit = engine.solve_core(
+            None, None, bs, cs, lbs, ubs, T, Sigma, rho, key, static,
+            operator=op)
+        return D2 * x, D1 * y, it, merit
+
+    def pipeline(df, cf, da, ca, bs, cs, lbs, ubs, keys):
+        return jax.vmap(one)(df, cf, da, ca, bs, cs, lbs, ubs, keys)
+
+    return pipeline
+
+
 # ------------------------------------------------------------- scheduler ---
 
 @dataclasses.dataclass
@@ -355,10 +511,15 @@ class BatchItemResult:
     converged: bool
     bucket: Tuple[int, int]
     mvm_calls: int = 0          # device MVMs (engine.mvm_accounting)
-    sparse: bool = False        # served by the sparse (COO) pipeline
+    sparse: bool = False        # served by a sparse (ELL/COO) pipeline
 
     @property
     def status(self) -> str:
+        # a non-finite merit means the iterate blew up — that is
+        # divergence, not a clean iteration limit (converged is already
+        # False: NaN <= tol compares false)
+        if not np.isfinite(self.merit):
+            return "diverged"
         return "optimal" if self.converged else "iteration_limit"
 
 
@@ -447,6 +608,9 @@ class BatchSolver:
     def _make_sparse_pipeline(self):
         return make_sparse_bucket_pipeline(self.opts, self.sigma_read)
 
+    def _make_ell_pipeline(self):
+        return make_ell_bucket_pipeline(self.opts, self.sigma_read)
+
     def _device_signature(self):
         """Hashable device component of the executable cache key."""
         return None
@@ -517,6 +681,19 @@ class BatchSolver:
         return self._compile(key, self._make_sparse_pipeline(), args,
                              donate)
 
+    def _executable_ell(self, mb: int, nb: int, wf: int, wa: int, B: int,
+                        dtype, *, donate: bool = False):
+        key = self._cache_key(("ell", mb, nb, wf, wa), B, dtype, donate)
+        k0 = jax.random.PRNGKey(0)
+        args = (self._sds((B, mb, wf), dtype),
+                self._sds((B, mb, wf), jnp.int32),
+                self._sds((B, nb, wa), dtype),
+                self._sds((B, nb, wa), jnp.int32),
+                self._sds((B, mb), dtype), self._sds((B, nb), dtype),
+                self._sds((B, nb), dtype), self._sds((B, nb), dtype),
+                self._sds((B, *k0.shape), k0.dtype))
+        return self._compile(key, self._make_ell_pipeline(), args, donate)
+
     def cache_info(self) -> dict:
         return {"hits": self.cache_hits, "misses": self.cache_misses,
                 "entries": len(self._cache)}
@@ -552,7 +729,8 @@ class BatchSolver:
                 converged=bool(merits[k] <= self.opts.tol),
                 bucket=bucket,
                 mvm_calls=engine.mvm_accounting(
-                    it, self.opts.check_every, lanczos),
+                    it, self.opts.check_every, lanczos,
+                    restart=self.opts.restart),
                 sparse=bool(getattr(lp, "is_sparse", False)),
             )
 
@@ -560,27 +738,40 @@ class BatchSolver:
         return nbytes >= self.donate_min_bytes and _donation_supported()
 
     def _dispatch_bucket(self, group, idxs, n_total: int,
-                         mb: int, nb: int, nnz: Optional[int], dtype,
+                         mb: int, nb: int, sig, dtype,
                          stats):
         """Stack one bucket and submit it to its compiled executable.
 
-        ``nnz`` is the group's nonzero bucket (None = dense serving).
-        Returns the (asynchronously dispatched) device outputs — the
-        call never blocks on the solve itself.
+        ``sig`` is the group's sparse signature: None for dense serving,
+        a bare int nnz bucket for the COO/BCOO backend, or
+        ``("ell", wf, wa)`` width buckets for the ELL backend.  Returns
+        the (asynchronously dispatched) device outputs — the call never
+        blocks on the solve itself.
         """
         B = self._padded_batch(len(group))
         # batch padding repeats the first instance; extras are dropped
         filler = [group[0]] * (B - len(group))
         keys = self._instance_keys(idxs, n_total, B)
-        if nnz is not None:
+        if isinstance(sig, tuple):                       # ("ell", wf, wa)
+            _, wf, wa = sig
+            stacked = stack_problems_ell(group + filler, m=mb, n=nb,
+                                         wf=wf, wa=wa)
+            stats["sparse_stack_bytes"] += sum(a.nbytes for a in stacked)
+            arrays = [jnp.asarray(a, jnp.int32) if i in (1, 3)
+                      else jnp.asarray(a, dtype)
+                      for i, a in enumerate(stacked)]
+            donate = self._donate(arrays[0].nbytes)
+            exe = self._executable_ell(mb, nb, wf, wa, B, dtype,
+                                       donate=donate)
+        elif sig is not None:                            # bare int nnz
             stacked = stack_problems_sparse(group + filler, m=mb, n=nb,
-                                            nnz=nnz)
+                                            nnz=sig)
             stats["sparse_stack_bytes"] += sum(a.nbytes for a in stacked)
             arrays = ([jnp.asarray(stacked[0], dtype),
                        jnp.asarray(stacked[1], jnp.int32)]
                       + [jnp.asarray(a, dtype) for a in stacked[2:]])
             donate = self._donate(arrays[0].nbytes)
-            exe = self._executable_sparse(mb, nb, nnz, B, dtype,
+            exe = self._executable_sparse(mb, nb, sig, B, dtype,
                                           donate=donate)
         else:
             group = [lp.densified() for lp in group]
@@ -597,8 +788,19 @@ class BatchSolver:
             keys = jax.device_put(keys, sh)
         return exe(*arrays, keys)
 
+    def _sparse_signature(self, lp: StandardLP):
+        """Sparse component of an instance's bucket key: the nnz bucket
+        (bare int — the COO/BCOO stacking axis) or the pair of ELL width
+        buckets.  Either way, one occupancy outlier never inflates (and
+        never recompiles) the whole shape bucket's stack."""
+        if self.opts.sparse_kernel == "ell":
+            wf, wa = coo_row_widths(lp.K.row, lp.K.col, lp.K.data,
+                                    lp.K.shape)
+            return ("ell", ell_width_bucket(wf), ell_width_bucket(wa))
+        return nnz_bucket(lp.K.nnz)
+
     def _group_buckets(self, lps: Sequence[StandardLP]) -> dict:
-        """Group stream positions by ((m_bucket, n_bucket), nnz_bucket).
+        """Group stream positions by ((m_bucket, n_bucket), sparse sig).
 
         Pure function of the stream (and solver config): every process
         of a multi-pod deployment derives the identical grouping, which
@@ -607,11 +809,8 @@ class BatchSolver:
         for i, lp in enumerate(lps):
             sp = bool(getattr(lp, "is_sparse", False)) and \
                 self.supports_sparse
-            # sparse instances bucket on nnz too, so one nonzero-count
-            # outlier never inflates (and never recompiles) the whole
-            # shape bucket's stack
-            nz = nnz_bucket(lp.K.nnz) if sp else None
-            buckets.setdefault((self._bucket(*lp.K.shape), nz),
+            sig = self._sparse_signature(lp) if sp else None
+            buckets.setdefault((self._bucket(*lp.K.shape), sig),
                                []).append(i)
         return buckets
 
@@ -657,16 +856,16 @@ class BatchSolver:
                  "dispatch_s": 0.0, "collect_s": 0.0}
         t0 = time.perf_counter()
         pending = []
-        for ((mb, nb), nz), idxs in mine.items():
+        for ((mb, nb), sig), idxs in mine.items():
             group = [lps[i] for i in idxs]
-            out = self._dispatch_bucket(group, idxs, len(lps), mb, nb, nz,
+            out = self._dispatch_bucket(group, idxs, len(lps), mb, nb, sig,
                                         dtype, stats)
             if self.async_dispatch:
-                pending.append((out, ((mb, nb), nz), idxs))
+                pending.append((out, ((mb, nb), sig), idxs))
             else:
                 jax.block_until_ready(out)
                 self._collect(out, (mb, nb), idxs, lps, results)
-                self._bucket_served(((mb, nb), nz), idxs, out)
+                self._bucket_served(((mb, nb), sig), idxs, out)
         stats["dispatch_s"] = time.perf_counter() - t0
         t0 = time.perf_counter()
         while pending:

@@ -174,20 +174,33 @@ def _reset_for_tests() -> None:
 
 def bucket_tag(key: BucketKey) -> str:
     """Stable string id of a bucket key (filenames, routing tables)."""
-    (mb, nb), nz = key
-    return f"{mb}x{nb}-" + ("dense" if nz is None else f"nnz{nz}")
+    (mb, nb), sig = key
+    if sig is None:
+        kind = "dense"
+    elif isinstance(sig, tuple):            # ("ell", wf, wa)
+        kind = f"ell{sig[1]}x{sig[2]}"
+    else:                                   # bare int nnz bucket
+        kind = f"nnz{sig}"
+    return f"{mb}x{nb}-{kind}"
 
 
 def bucket_cost(key: BucketKey, queue_depth: int) -> int:
     """Deterministic serving cost: padded FLOPs per MVM x queue depth.
 
-    Dense buckets move 2*mb*nb FLOPs per MVM; sparse buckets 2*nnz_bucket
-    (scatter contractions touch stored entries only).  ``queue_depth`` is
-    the padded batch the executable will actually run — filler slots cost
-    real FLOPs, so they count.
+    Dense buckets move 2*mb*nb FLOPs per MVM; COO sparse buckets
+    2*nnz_bucket (scatter contractions touch stored entries only); ELL
+    buckets mb*wf + nb*wa (the two gather contractions of one fwd+adj
+    MVM pair, padding slots included).  ``queue_depth`` is the padded
+    batch the executable will actually run — filler slots cost real
+    FLOPs, so they count.
     """
-    (mb, nb), nz = key
-    flops_per_mvm = 2 * (mb * nb if nz is None else nz)
+    (mb, nb), sig = key
+    if sig is None:
+        flops_per_mvm = 2 * mb * nb
+    elif isinstance(sig, tuple):            # ("ell", wf, wa)
+        flops_per_mvm = mb * sig[1] + nb * sig[2]
+    else:                                   # bare int nnz bucket
+        flops_per_mvm = 2 * sig
     return int(flops_per_mvm) * int(queue_depth)
 
 
@@ -399,10 +412,10 @@ class ClusterBatchSolver(BatchSolver):
         dtype = np.dtype(self.opts.dtype)
         outs = []
         for key, idxs in pairs:
-            (mb, nb), nz = key
+            (mb, nb), sig = key
             group = [lps[i] for i in idxs]
             outs.append((key, idxs, self._dispatch_bucket(
-                group, idxs, len(lps), mb, nb, nz, dtype, stats)))
+                group, idxs, len(lps), mb, nb, sig, dtype, stats)))
         for key, idxs, out in outs:
             jax.block_until_ready(out)
             self._collect(out, key[0], idxs, lps, results)

@@ -220,3 +220,43 @@ def test_infeasible_lp_yields_farkas_certificate(x64):
         from repro.core import check_farkas
         cert = check_farkas(lp.K, lp.b, r.certificate.y_ray)
         assert cert.kind == "primal_infeasible"
+
+
+# --------------------------------------------- truthful divergence status ---
+
+def test_blown_up_solve_reports_diverged_not_iteration_limit(x64):
+    """Regression: a numerically blown-up solve (non-finite merit) used to
+    report ``iteration_limit`` — indistinguishable from a clean
+    out-of-budget exit.  An absurd norm override (rho ~ 1e-12 makes the
+    steps ~1e12x too large) drives the iterates to NaN within one check
+    window; every reporting surface must call that ``diverged``."""
+    lp = random_standard_lp(8, 14, seed=0)
+    opts = PDHGOptions(max_iters=256, tol=1e-6, check_every=64,
+                       norm_override=1e-12)
+
+    r_jit = solve_jit(lp, opts)
+    assert not np.isfinite(r_jit.merit)
+    assert r_jit.status == "diverged"
+    # the loop exits at the first check (NaN > tol is false), so the
+    # report is immediate, not a 256-iteration slog
+    assert r_jit.iterations == opts.check_every
+
+    r_host = solve(lp, opts)
+    assert not np.isfinite(r_host.merit)
+    assert r_host.status == "diverged"
+
+
+def test_batch_stream_reports_diverged_items(x64):
+    """The batch scheduler surfaces per-item divergence: a blown-up item
+    reports status='diverged' (converged=False), while a healthy stream
+    mate in the SAME bucket still reports its own clean status."""
+    from repro.runtime import BatchSolver
+
+    lp = random_standard_lp(8, 14, seed=0)
+    bad = BatchSolver(PDHGOptions(max_iters=256, tol=1e-6, check_every=64,
+                                  norm_override=1e-12)).solve_stream([lp])[0]
+    assert bad.status == "diverged"
+    assert not bad.converged
+    good = BatchSolver(PDHGOptions(max_iters=20000, tol=1e-5,
+                                   check_every=64)).solve_stream([lp])[0]
+    assert good.status == "optimal"

@@ -171,7 +171,7 @@ def test_batch_solver_kernel_parity_and_cache_isolation(x64):
     assert s_pal.opts.kernel == "pallas"
     # kernel choice is part of the signature: no silent cross-kernel hits
     assert set(s_jnp._cache).isdisjoint(set(s_pal._cache))
-    assert opts_static(s_jnp.opts)[-1] != opts_static(s_pal.opts)[-1]
+    assert opts_static(s_jnp.opts)[8] != opts_static(s_pal.opts)[8]
 
 
 def test_crossbar_pallas_operator_matches_dense_decode(x64):
@@ -330,3 +330,92 @@ def test_launch_solve_kernel_flag(x64, capsys):
                     "--instances", "rand:6x10,rand:8x12",
                     "--max-iters", "2000", "--tol", "1e-4"])
     assert all(r.converged for r in results)
+
+
+# ------------------------------------- restart flag + megakernel mode ---
+
+def test_restart_false_matches_legacy_nan_trick_bitwise(x64):
+    """``restart=False`` rides as an explicit static boolean.  The old
+    encoding (restart_beta=0.0) only worked because ``0.0 * inf == NaN``
+    and NaN comparisons are false inside the jitted body; the explicit
+    flag must reproduce it bitwise — same iterates, same merit — and the
+    average is provably never adopted (a restart=True run on the same
+    seed differs)."""
+    _, scaled, T, Sigma, rho = _prepped(seed=3)
+    b, c, lb, ub = scaled.b, scaled.c, scaled.lb, scaled.ub
+    key = jax.random.PRNGKey(7)
+    core = jax.jit(engine.solve_core, static_argnums=(10,))
+    args = (scaled.K, scaled.K.T, b, c, lb, ub, T, Sigma, rho, key)
+
+    legacy = (512, 1e-30, 0.95, 1.0, 0.0, 64, 0.0, 0.0, "jnp")
+    flag = (512, 1e-30, 0.95, 1.0, 0.0, 64, 0.5, 0.0, "jnp",
+            False, "ell", False)
+    on = (512, 1e-30, 0.95, 1.0, 0.0, 64, 0.5, 0.0, "jnp",
+          True, "ell", False)
+
+    x_leg, y_leg, it_leg, m_leg = core(*args, legacy)
+    x_off, y_off, it_off, m_off = core(*args, flag)
+    x_on, y_on, _, _ = core(*args, on)
+
+    assert int(it_leg) == int(it_off)
+    np.testing.assert_array_equal(np.asarray(x_leg), np.asarray(x_off))
+    np.testing.assert_array_equal(np.asarray(y_leg), np.asarray(y_off))
+    np.testing.assert_array_equal(np.asarray(m_leg), np.asarray(m_off))
+    # the flag is live: restarts DO change the trajectory on this seed
+    assert not np.array_equal(np.asarray(x_on), np.asarray(x_off))
+
+
+def test_mvm_accounting_restart_flag_and_batch_ledger(x64):
+    """restart=False residual checks cost 2 MVMs (no averaged-iterate
+    pair); every reporting surface charges the flag it actually ran."""
+    assert engine.mvm_accounting(128, 64, 16) \
+        == engine.mvm_accounting(128, 64, 16, restart=True)
+    assert engine.mvm_accounting(128, 64, 16, restart=True) \
+        - engine.mvm_accounting(128, 64, 16, restart=False) == 2 * 2
+
+    lp = random_standard_lp(8, 14, seed=4)
+    opts = PDHGOptions(max_iters=256, tol=1e-30, check_every=64,
+                       restart=False)
+    r = solve_jit(lp, opts)
+    assert r.mvm_calls == engine.mvm_accounting(
+        r.iterations, opts.check_every, opts.lanczos_iters, restart=False)
+    rb = BatchSolver(opts).solve_stream([lp])[0]
+    assert rb.mvm_calls == engine.mvm_accounting(
+        rb.iterations, opts.check_every, opts.lanczos_iters, restart=False)
+
+
+def test_dense_megakernel_matches_per_step_loop(x64):
+    """megakernel=True fuses each check_every window into ONE launch
+    (restart/residual check hoisted out) — iterates must match the
+    per-step loop to fp tolerance at sigma_read=0, with the identical
+    iteration count."""
+    lp = random_standard_lp(10, 18, seed=6)
+    opts = PDHGOptions(max_iters=2000, tol=1e-6, check_every=64)
+    mega = dc.replace(opts, megakernel=True)
+    r_ref = solve_jit(lp, opts)
+    r_meg = solve_jit(lp, mega)
+    assert r_meg.iterations == r_ref.iterations
+    assert r_meg.status == r_ref.status
+    np.testing.assert_allclose(r_meg.x, r_ref.x, atol=1e-9, rtol=1e-9)
+    np.testing.assert_allclose(r_meg.y, r_ref.y, atol=1e-9, rtol=1e-9)
+
+
+def test_megakernel_rejects_read_noise():
+    """Per-MVM noise keys cannot be split inside a fused launch; the
+    static-tuple builder refuses the combination up front."""
+    with pytest.raises(ValueError, match="noiseless-only"):
+        opts_static(PDHGOptions(megakernel=True), 0.05)
+
+
+def test_megakernel_batch_cache_key_disjoint(x64):
+    """The megakernel flag is part of the executable cache key: serving
+    the same bucket with and without it must compile twice, never
+    cross-serve."""
+    lp = random_standard_lp(8, 14, seed=1)
+    opts = PDHGOptions(max_iters=128, tol=1e-30, check_every=64)
+    solver = BatchSolver(opts)
+    solver.solve_stream([lp])
+    solver_m = BatchSolver(dc.replace(opts, megakernel=True))
+    solver_m.solve_stream([lp])
+    assert set(solver._cache).isdisjoint(set(solver_m._cache))
+    assert opts_static(solver.opts) != opts_static(solver_m.opts)

@@ -3,23 +3,30 @@
 CI runs this right after the smoke stream benchmark:
 
   1. **Schema validation** — the candidate record must be
-     ``bench_stream/v4``: every serving path (dense batched /
+     ``bench_stream/v5``: every serving path (dense batched /
      per-instance, crossbar batched / per-instance, the three sparse
      backends — default ELL, nnz-bucketed BCOO, ELL + fused
      multi-iteration megakernel — and the densified sparse baseline,
      async + sync dispatch, per-pod routed cluster serving) present
      with finite numeric ``cold_s``/``warm_s``/``mvm_total``, plus the
-     ``sparse`` host-memory summary and the ``cluster`` routing summary
-     (non-empty routing table, per-pod throughput shares).
+     ``sparse`` host-memory summary, the ``cluster`` routing summary
+     (non-empty routing table, per-pod throughput shares), and the
+     ``sanitize`` section (per-path warm-pass XLA compile counts from
+     ``repro.runtime.sanitize``).
   2. **Regression gate** — the warm BUCKETED paths (the steady-state
      serving numbers) must not regress more than ``--max-regression``
      (default 2x) against the committed baseline
-     (``git show HEAD:BENCH_stream.json`` in CI).  v1-v3 baselines are
+     (``git show HEAD:BENCH_stream.json`` in CI).  v1-v4 baselines are
      accepted: only the path keys both records share are compared.
   3. **Sparse-wins gate** — the acceptance criterion of the ELL
      backend: the default sparse pipeline's warm serving must be at
      least ``--min-sparse-speedup`` (default 1x) as fast as the
      densified dense baseline on the same >=95%-sparse stream.
+  4. **Zero-recompile gate** — with ``--max-warm-compiles N`` (CI
+     passes 0), every warm batched pass must have compiled at most N
+     fresh XLA executables.  A violation means an executable-cache key
+     drifted (stale ``opts_static`` field, unstable bucket signature).
+     Skipped when the record says compile counting was unsupported.
 
 Exit code 0 = pass; 1 = schema or regression failure (messages on
 stderr).
@@ -34,9 +41,9 @@ import json
 import math
 import sys
 
-SCHEMA = "bench_stream/v4"
+SCHEMA = "bench_stream/v5"
 
-# every serving path a v4 record must carry
+# every serving path a v5 record must carry
 REQUIRED_PATHS = (
     "exact_batched",
     "exact_per_instance",
@@ -64,6 +71,9 @@ PER_POD_FIELDS = ("n_buckets", "n_instances", "flops_cost", "flops_share",
 # warm steady-state serving paths gated against the committed baseline
 GUARDED_WARM_PATHS = ("exact_batched", "crossbar_batched", "sparse_batched",
                       "exact_routed")
+
+# warm passes whose XLA compile counts the sanitize section must carry
+SANITIZE_PATHS = ("exact_batched", "sparse_batched", "crossbar_batched")
 
 def _fail(msg: str) -> None:
     print(f"bench_guard: FAIL: {msg}", file=sys.stderr)
@@ -116,6 +126,19 @@ def validate_schema(bench: dict) -> None:
     pods_routed = set(cluster["routing"].values())
     if not pods_routed <= set(range(int(cluster["n_pods"]))):
         _fail(f"cluster.routing targets unknown pods: {pods_routed}")
+    san = bench.get("sanitize")
+    if not isinstance(san, dict):
+        _fail("missing 'sanitize' section")
+    if not isinstance(san.get("compile_counting"), bool):
+        _fail("sanitize.compile_counting must be a bool")
+    warm = san.get("warm_compiles")
+    if not isinstance(warm, dict):
+        _fail("sanitize.warm_compiles must be a path->count object")
+    for name in SANITIZE_PATHS:
+        v = warm.get(name)
+        if not (isinstance(v, int) and not isinstance(v, bool) and v >= 0):
+            _fail(f"sanitize.warm_compiles.{name} is not a non-negative "
+                  f"int: {v!r}")
 
 
 def check_regressions(candidate: dict, baseline: dict,
@@ -156,6 +179,24 @@ def check_sparse_wins(candidate: dict, min_speedup: float) -> None:
               f"baseline (>= {min_speedup}x required)")
 
 
+def check_warm_compiles(candidate: dict, max_compiles: int) -> None:
+    """Zero-recompile gate: warm batched passes must stay compile-free."""
+    san = candidate["sanitize"]
+    if not san["compile_counting"]:
+        print("bench_guard: compile counting unsupported on the producing "
+              "runtime; warm-compile gate skipped")
+        return
+    for name, count in sorted(san["warm_compiles"].items()):
+        status = "ok" if count <= max_compiles else "RECOMPILE"
+        print(f"bench_guard: {name}: warm pass compiled {count} "
+              f"executable(s) [{status}]")
+        if count > max_compiles:
+            _fail(f"{name} warm pass compiled {count} fresh XLA "
+                  f"executable(s) (> {max_compiles} allowed) — an "
+                  f"executable-cache key drifted (stale opts_static "
+                  f"field or unstable bucket signature)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--candidate", default="BENCH_stream.json",
@@ -168,6 +209,9 @@ def main(argv=None) -> int:
     ap.add_argument("--min-sparse-speedup", type=float, default=1.0,
                     help="min required densified/sparse warm-time ratio "
                          "(0 disables the sparse-wins gate)")
+    ap.add_argument("--max-warm-compiles", type=int, default=None,
+                    help="max XLA compilations allowed in each warm "
+                         "batched pass (CI passes 0; omit to skip)")
     args = ap.parse_args(argv)
 
     with open(args.candidate) as f:
@@ -177,6 +221,8 @@ def main(argv=None) -> int:
           f"({len(candidate['paths'])} paths)")
     if args.min_sparse_speedup > 0:
         check_sparse_wins(candidate, args.min_sparse_speedup)
+    if args.max_warm_compiles is not None:
+        check_warm_compiles(candidate, args.max_warm_compiles)
 
     if args.baseline:
         with open(args.baseline) as f:

@@ -18,15 +18,15 @@ def _emit(name, us_per_call, derived):
 
 
 def main() -> None:
-    t_all = time.time()
+    t_all = time.perf_counter()
     summaries = []
     full_outputs = []
 
     # Table 1 — instances
     from . import table1_instances
-    t0 = time.time()
+    t0 = time.perf_counter()
     h, rows = table1_instances.run()
-    dt = (time.time() - t0) / max(len(rows), 1)
+    dt = (time.perf_counter() - t0) / max(len(rows), 1)
     summaries.append(("table1_instances", dt * 1e6,
                       f"instances={len(rows)}"))
     full_outputs.append(("TABLE 1 — problem instances", h, rows))
@@ -35,10 +35,10 @@ def main() -> None:
     from . import table2_energy_latency, table3_overall, table4_lanczos, \
         table5_pdhg
     from ._shared import cached_results
-    t0 = time.time()
+    t0 = time.perf_counter()
     res = cached_results()
     n_solves = sum(len(v["backends"]) for v in res.values())
-    solve_us = (time.time() - t0) / max(n_solves, 1) * 1e6
+    solve_us = (time.perf_counter() - t0) / max(n_solves, 1) * 1e6
 
     h, rows = table2_energy_latency.run()
     # headline: median PDHG energy factor for TaOx-HfOx
@@ -66,9 +66,9 @@ def main() -> None:
 
     # Figure 2 — convergence vs latency
     from . import fig2_convergence
-    t0 = time.time()
+    t0 = time.perf_counter()
     traces = fig2_convergence.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     final_gap = traces["TaOx-HfOx"][-1][2]
     summaries.append(("fig2_convergence", dt * 1e6 / 3,
                       f"taox_final_gap={final_gap:.2e}"))
@@ -99,7 +99,7 @@ def main() -> None:
         for r in rows:
             print(",".join(str(x) for x in r))
         print()
-    print(f"total benchmark wall time: {time.time() - t_all:.1f}s",
+    print(f"total benchmark wall time: {time.perf_counter() - t_all:.1f}s",
           file=sys.stderr)
 
 

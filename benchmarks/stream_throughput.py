@@ -20,17 +20,19 @@ Each timed path runs twice: COLD includes compilation, WARM is the
 steady-state serving cost (the number that matters for throughput).
 ``--kernel`` selects the engine's update backend (jnp vs fused Pallas).
 Besides the full record, every run emits ``BENCH_stream.json`` at the
-repo root (schema ``bench_stream/v4``: per-path warm/cold seconds +
+repo root (schema ``bench_stream/v5``: per-path warm/cold seconds +
 device-MVM totals — including the three sparse backends (``sparse_ell``
 = the default row-blocked ELL pipeline, ``sparse_bcoo`` = nnz-bucketed
 COO, ``sparse_ell_mega`` = ELL with the fused multi-iteration
 megakernel), the async-vs-sync dispatch split and the per-pod ROUTED
-cluster path — plus a ``sparse`` host-memory summary and a ``cluster``
-summary with the routing table and per-pod throughput shares) as the
-perf baseline for future PRs; CI uploads it and
+cluster path — plus a ``sparse`` host-memory summary, a ``cluster``
+summary with the routing table and per-pod throughput shares, and a
+``sanitize`` section recording the XLA compilation count of every warm
+batched pass) as the perf baseline for future PRs; CI uploads it and
 ``benchmarks/bench_guard.py`` gates regressions against it, including
 the acceptance-criterion gate that the default sparse pipeline's warm
-serving is at least as fast as the densified baseline.
+serving is at least as fast as the densified baseline and the
+zero-recompile gate (``--max-warm-compiles 0``) on the warm passes.
 """
 from __future__ import annotations
 
@@ -99,6 +101,9 @@ def bench_exact(lps, opts):
         **timings,
         "speedup_warm": timings["per_instance_warm_s"]
         / max(timings["batched_warm_s"], 1e-12),
+        # sanitizer surface: XLA compilations during the warm pass (the
+        # executable-cache contract says this must be 0)
+        "warm_compiles": solver.last_stream_stats["compiles"],
         "cache": solver.cache_info(),
         "buckets": sorted({str(r.bucket) for r in results}),
         "max_rel_gap": float(max(gaps)),
@@ -174,6 +179,7 @@ def bench_sparse(lps, opts):
         "host_stack_bytes_dense": int(mem_dense),
         "host_stack_bytes_sparse": int(mem_sparse),
         "host_mem_improvement": mem_dense / max(mem_sparse, 1),
+        "warm_compiles": sparse_stats["compiles"],
         "cache": solver_s.cache_info(),
         "max_rel_gap": float(max(gaps)),
         "max_rel_disagreement_vs_dense": float(max(
@@ -335,6 +341,7 @@ def bench_device(lps, opts, device):
         **timings,
         "speedup_warm": timings["per_instance_warm_s"]
         / max(timings["batched_warm_s"], 1e-12),
+        "warm_compiles": solver.last_stream_stats["compiles"],
         "cache": solver.cache_info(),
         "max_rel_gap": float(max(gaps)),
         "ledger_batched": _sum_ledgers(reports),
@@ -422,10 +429,23 @@ def main(argv=None):
     # seconds + device-MVM totals, written at the repo root so CI can
     # upload it as a stable-named artifact next to the full record and
     # ``bench_guard.py`` can gate schema + warm-path regressions on it.
+    from repro.runtime import sanitize
+
     bench = {
-        "schema": "bench_stream/v4",
+        "schema": "bench_stream/v5",
         "kernel": args.kernel,
         "config": record["config"],
+        # runtime-sanitizer surface: XLA compilations during each warm
+        # serving pass.  The executable-cache contract says all of these
+        # are 0; ``bench_guard --max-warm-compiles 0`` gates it in CI.
+        "sanitize": {
+            "compile_counting": bool(sanitize.supported()),
+            "warm_compiles": {
+                "exact_batched": record["exact"]["warm_compiles"],
+                "sparse_batched": record["sparse"]["warm_compiles"],
+                "crossbar_batched": record["crossbar"]["warm_compiles"],
+            },
+        },
         "paths": {
             **{
                 f"{path}_{variant}": {

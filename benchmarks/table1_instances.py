@@ -18,7 +18,7 @@ def run():
     rows = []
     for name, (m, n) in TABLE1_SIZES.items():
         lp = table1_instance(name)
-        t0 = time.time()
+        t0 = time.perf_counter()
         if lp.K.shape[1] <= 120:
             r = simplex.solve(lp)
             solver, obj = "simplex", r.obj
@@ -26,7 +26,7 @@ def run():
             from repro.core import PDHGOptions, solve_jit
             r = solve_jit(lp, PDHGOptions(max_iters=60000, tol=1e-8))
             solver, obj = "pdhg-hp", r.obj
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         rows.append((name, f"{m}x{n}", f"{lp.obj_opt:.4f}", f"{obj:.4f}",
                      solver, f"{dt:.2f}"))
     header = ("problem", "size(mxn)", "known_obj", "solved_obj", "oracle",

@@ -27,12 +27,12 @@ def main():
             tok, _, cache = serve(params, prompt[:, t:t + 1], cache)
         out = [prompt]
         cur = tok[:, None]
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(gen_len):
             tok, _, cache = serve(params, cur, cache)
             cur = tok[:, None]
             out.append(cur)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         seq = jnp.concatenate(out, axis=1)
         print(f"{arch:18s} ({cfg.mixer:6s}): generated {gen_len} tokens x "
               f"{B} seqs in {dt:.2f}s "

@@ -65,7 +65,7 @@ def main():
     step_fn = jax.jit(make_train_step(cfg, tcfg))
     data = Prefetcher(DataConfig(cfg.vocab, batch, seq))
     mgr = CheckpointManager("/tmp/repro_train_lm", every=100)
-    t0 = time.time()
+    t0 = time.perf_counter()
     first = None
     try:
         for step in range(steps):
@@ -74,7 +74,7 @@ def main():
             loss = float(m["loss"])
             first = first if first is not None else loss
             if (step + 1) % 20 == 0:
-                dt = (time.time() - t0) / (step + 1)
+                dt = (time.perf_counter() - t0) / (step + 1)
                 print(f"  step {step+1:4d}: loss {loss:.4f} "
                       f"({dt*1e3:.0f} ms/step, "
                       f"{batch*seq/dt:.0f} tok/s)", flush=True)

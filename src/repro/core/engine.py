@@ -514,8 +514,10 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     """
     (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
      sigma_read, kernel) = static[:9]
-    restart = bool(static[9]) if len(static) > 9 else True
-    megakernel = bool(static[11]) if len(static) > 11 else False
+    # ``static`` is the jit static-arg tuple — plain Python values at
+    # trace time, so these bool() calls never touch the device
+    restart = bool(static[9]) if len(static) > 9 else True  # jaxlint: disable=R5
+    megakernel = bool(static[11]) if len(static) > 11 else False  # jaxlint: disable=R5
     m, n = b.shape[0], c.shape[0]
     # an all-zero operator (degenerate but legal: the optimum is just the
     # box projection of -c's direction) has rho = 0; unguarded it makes

@@ -302,11 +302,30 @@ def solve(
 # lives in ``core.engine`` — this is the option plumbing around it).
 # --------------------------------------------------------------------------
 
+# PDHGOptions fields that deliberately stay OUT of the compiled-executable
+# cache key (``tools.jaxlint`` rule R1 cross-checks this allowlist against
+# the dataclass fields and the ``opts_static`` tuple below — adding an
+# option without deciding its cache-key fate is a lint error).
+# ``ruiz_iters``/``lanczos_iters``/``norm_override`` ride in
+# ``runtime.batch``'s separate prep-signature tuple; ``lanczos_tol``/
+# ``use_diag_precond``/``infeasibility_detection`` only steer the host
+# solve path; ``seed``/``track_history`` are runtime data; ``dtype`` is
+# already encoded by every traced array shape.
+DYNAMIC_FIELDS = (
+    "ruiz_iters", "use_diag_precond", "lanczos_iters", "lanczos_tol",
+    "infeasibility_detection", "seed", "dtype", "track_history",
+    "norm_override",
+)
+
+
 def opts_static(opts: PDHGOptions, sigma_read: float = 0.0) -> tuple:
     """The hashable option tuple ``engine.solve_core`` consumes
     (positional unpack — keep in sync with the head of that function, and
     nowhere else: ``solve_jit``, ``runtime.batch`` and
-    ``crossbar.solver`` all build it through here).  ``opts.kernel``,
+    ``crossbar.solver`` all build it through here; fields that
+    deliberately stay out of the tuple are declared in
+    ``DYNAMIC_FIELDS`` and the pairing is machine-checked by jaxlint
+    rule R1).  ``opts.kernel``,
     ``opts.restart``, ``opts.sparse_kernel`` and ``opts.megakernel`` are
     part of the tuple, so compiled-executable caches keyed on it never
     serve one backend's executable to another.  ``opts.restart`` rides
@@ -339,6 +358,7 @@ def solve_jit(
     K_fwd=None,
     K_adj=None,
     sigma_read: float = 0.0,
+    transfer_sanitize: bool = False,
 ) -> PDHGResult:
     """Jitted dense-K solver: Ruiz + PC precond + Lanczos + while_loop.
 
@@ -346,6 +366,11 @@ def solve_jit(
     decoded programmed crossbar blocks, already in the Ruiz-scaled frame);
     preconditioning and residual scaling still derive from the nominal K.
     ``sigma_read`` adds multiplicative per-MVM read noise inside the loop.
+    ``transfer_sanitize`` runs the jitted iteration core under
+    ``runtime.sanitize.no_implicit_transfers()`` — every input is device
+    resident by then, so any implicit transfer the solve triggers is a
+    bug and raises (host-side prep/result extraction stay unguarded:
+    those transfers are the sanctioned ones).
     """
     scaled, T, Sigma = prepare(lp, opts)
     Kf = scaled.K if K_fwd is None else jnp.asarray(K_fwd, scaled.K.dtype)
@@ -358,10 +383,16 @@ def solve_jit(
         rho = engine.lemma2_margin(rho, sigma_read)
     static = opts_static(opts, sigma_read)
     core = jax.jit(engine.solve_core, static_argnums=(10,))
-    x, y, it, merit = core(
+    core_args = (
         Kf, Ka, scaled.b, scaled.c, scaled.lb, scaled.ub, T, Sigma, rho,
         jax.random.PRNGKey(opts.seed + 1), static,
     )
+    if transfer_sanitize:
+        from ..runtime import sanitize
+        with sanitize.no_implicit_transfers():
+            x, y, it, merit = core(*core_args)
+    else:
+        x, y, it, merit = core(*core_args)
     x_orig = np.asarray(scaled.unscale_x(x))
     y_orig = np.asarray(scaled.unscale_y(y))
     res = kkt_residuals(

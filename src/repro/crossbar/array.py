@@ -40,6 +40,9 @@ class CrossbarArray:
     ledger: Ledger
     device: DeviceModel
     use_kernel: bool = False
+    # base key for keyless ``mvm`` read noise, derived from the
+    # programming key so the whole device history is one seed
+    read_key: Optional[jax.Array] = None
 
     @classmethod
     def program(
@@ -51,10 +54,14 @@ class CrossbarArray:
         use_kernel: bool = False,
     ) -> "CrossbarArray":
         if key is None:
-            key = jax.random.PRNGKey(0)
+            # reproducible default: programming a crossbar with no key
+            # must yield the same conductances every run
+            key = jax.random.PRNGKey(0)  # jaxlint: disable=R2
         ledger = ledger if ledger is not None else Ledger()
         enc = encode_matrix(W, device, key, ledger=ledger)
-        return cls(enc=enc, ledger=ledger, device=device, use_kernel=use_kernel)
+        return cls(enc=enc, ledger=ledger, device=device,
+                   use_kernel=use_kernel,
+                   read_key=jax.random.fold_in(key, 0x52454144))
 
     def mvm(self, v, key: Optional[jax.Array] = None) -> jnp.ndarray:
         """One logical analog MVM: w = W @ v with device non-idealities."""
@@ -64,7 +71,14 @@ class CrossbarArray:
         vp = jnp.zeros((C,), enc.g_pos.dtype).at[: enc.cols].set(
             jnp.asarray(v, enc.g_pos.dtype))
         if key is None:
-            key = jax.random.PRNGKey(0)
+            # fold the MVM count into the programming-derived read key:
+            # cycle-to-cycle read noise must differ per call (a fixed
+            # fallback key used to replay the SAME noise sample on every
+            # keyless MVM, silently correlating whole solves)
+            base = self.read_key
+            if base is None:
+                base = jax.random.PRNGKey(0)  # jaxlint: disable=R2
+            key = jax.random.fold_in(base, self.ledger.mvm_count)
         if self.use_kernel:
             from ..kernels import ops as kops
             noise = dev.sigma_read * jax.random.normal(key, (R,), vp.dtype)
@@ -123,7 +137,9 @@ def analog_linear(x, W, device: DeviceModel = EPIRAM, key=None):
     see DESIGN.md §Arch-applicability).
     """
     if key is None:
-        key = jax.random.PRNGKey(0)
+        # reproducible inference-demo default (weights + activations
+        # share one seed; pass a key to decorrelate runs)
+        key = jax.random.PRNGKey(0)  # jaxlint: disable=R2
     arr = CrossbarArray.program(jnp.asarray(W), device=device, key=key)
     xs = jnp.atleast_2d(x)
     k = jax.random.split(key, xs.shape[0])

@@ -218,12 +218,12 @@ def lower_lp_cell(lp_name: str, mesh, n_inner: int = 64):
 
 def _compile_and_analyze(fn, args, mesh, cfg=None, shape=None, lp=None,
                          n_inner=None):
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = fn.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):

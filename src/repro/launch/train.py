@@ -62,18 +62,18 @@ def main(argv=None):
                       if cfg.frontend in ("vision", "audio") else 0)
     data = Prefetcher(dcfg, start_step=start_step)
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         for step in range(start_step, args.steps):
             batch = {k: jnp.asarray(v) for k, v in next(data).items()}
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             losses.append(float(metrics["loss"]))
             if (step + 1) % args.log_every == 0:
-                dt = (time.time() - t0) / args.log_every
+                dt = (time.perf_counter() - t0) / args.log_every
                 tok_s = args.batch * args.seq / dt
                 print(f"step {step+1}: loss={losses[-1]:.4f} "
                       f"{dt*1e3:.0f} ms/step {tok_s:.0f} tok/s", flush=True)
-                t0 = time.time()
+                t0 = time.perf_counter()
             if mgr is not None:
                 path = mgr.maybe_save(
                     step + 1,

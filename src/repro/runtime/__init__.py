@@ -12,6 +12,9 @@ device and sharding machinery:
     a CPU multi-device fallback for tests.
   * ``runtime.batch``   — shape-bucketed batch solving of heterogeneous
     LP streams with a compiled-executable cache per bucket.
+  * ``runtime.sanitize`` — compile-count guard (warm streams assert
+    zero recompiles) + ``jax.transfer_guard`` wrapper for the jitted
+    solve paths; the runtime twin of ``tools.jaxlint``.
   * ``runtime.cluster`` — multi-host serving: env-driven
     ``jax.distributed`` bring-up with a single-process fallback,
     deterministic per-pod bucket routing, and the
@@ -20,7 +23,7 @@ device and sharding machinery:
 No module outside ``runtime.compat`` may reference the volatile
 ``jax.sharding`` attributes directly.
 """
-from . import batch, compat, mesh
+from . import batch, compat, mesh, sanitize
 # cluster pulls in repro.distributed (fault-tolerant transport); import
 # it last so the partially initialized package already exposes the
 # submodules that chain re-enters (compat via distributed.pdhg_dist)
@@ -35,6 +38,7 @@ from .compat import (
     shard_map,
     use_mesh,
 )
+from .sanitize import CompileGuard, RecompileError, no_implicit_transfers
 from .mesh import (
     make_cluster_mesh,
     make_local_mesh,
@@ -45,6 +49,8 @@ from .mesh import (
 __all__ = [
     "BatchSolver",
     "ClusterBatchSolver",
+    "CompileGuard",
+    "RecompileError",
     "batch",
     "batch_axes",
     "cluster",
@@ -52,6 +58,8 @@ __all__ = [
     "constrain",
     "get_abstract_mesh",
     "init_cluster",
+    "no_implicit_transfers",
+    "sanitize",
     "make_cluster_mesh",
     "make_local_mesh",
     "make_mesh",

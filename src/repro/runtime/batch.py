@@ -72,6 +72,7 @@ from ..kernels.sparse_mvm import (
     ell_width_bucket,
 )
 from ..lp.problem import SparseCOO, StandardLP
+from . import sanitize
 
 MIN_BUCKET = 8
 MIN_NNZ_BUCKET = 16
@@ -567,7 +568,13 @@ class BatchSolver:
     hosts); ``donate_min_bytes`` is the stacked-operator size beyond
     which the input buffer is donated to the executable.
     ``last_stream_stats`` records, per ``solve_stream`` call, the host
-    bytes each stacking path materialized plus dispatch/collect timings.
+    bytes each stacking path materialized, dispatch/collect timings, and
+    ``compiles`` — the number of XLA compilations the call triggered
+    (``runtime.sanitize``; a warm pass over a bucket mix served before
+    must report 0).  ``transfer_sanitize=True`` additionally runs every
+    executable under ``sanitize.no_implicit_transfers()``, so an
+    accidental per-call host<->device transfer raises instead of
+    silently serializing dispatch.
     """
 
     supports_sparse = True
@@ -579,7 +586,8 @@ class BatchSolver:
                  tile: Optional[Tuple[int, int]] = None,
                  kernel: Optional[str] = None,
                  async_dispatch: bool = True,
-                 donate_min_bytes: int = DONATE_MIN_BYTES):
+                 donate_min_bytes: int = DONATE_MIN_BYTES,
+                 transfer_sanitize: bool = False):
         if kernel is not None:
             # convenience override; the kernel choice rides in opts and
             # therefore in every executable cache signature
@@ -592,6 +600,7 @@ class BatchSolver:
         self.tile = None if tile is None else (int(tile[0]), int(tile[1]))
         self.async_dispatch = bool(async_dispatch)
         self.donate_min_bytes = int(donate_min_bytes)
+        self.transfer_sanitize = bool(transfer_sanitize)
         self._cache = {}
         self.cache_hits = 0
         self.cache_misses = 0
@@ -659,10 +668,20 @@ class BatchSolver:
     def _sds(self, shape, dt):
         return jax.ShapeDtypeStruct(shape, dt, sharding=self._sharding())
 
+    @staticmethod
+    def _key_template():
+        """Shape/dtype template for one per-instance PRNG key slot.
+
+        The constant key never produces random bits: executables are
+        lowered from abstract shapes only, and the real per-instance
+        keys are threaded at call time by ``_instance_keys``.
+        """
+        return jax.random.PRNGKey(0)  # jaxlint: disable=R2
+
     def _executable(self, mb: int, nb: int, B: int, dtype, *,
                     donate: bool = False):
         key = self._cache_key(("dense", mb, nb), B, dtype, donate)
-        k0 = jax.random.PRNGKey(0)
+        k0 = self._key_template()
         args = (self._sds((B, mb, nb), dtype), self._sds((B, mb), dtype),
                 self._sds((B, nb), dtype), self._sds((B, nb), dtype),
                 self._sds((B, nb), dtype), self._sds((B, *k0.shape),
@@ -672,7 +691,7 @@ class BatchSolver:
     def _executable_sparse(self, mb: int, nb: int, nnz: int, B: int,
                            dtype, *, donate: bool = False):
         key = self._cache_key(("sparse", mb, nb, nnz), B, dtype, donate)
-        k0 = jax.random.PRNGKey(0)
+        k0 = self._key_template()
         args = (self._sds((B, nnz), dtype),
                 self._sds((B, nnz, 2), jnp.int32),
                 self._sds((B, mb), dtype), self._sds((B, nb), dtype),
@@ -684,7 +703,7 @@ class BatchSolver:
     def _executable_ell(self, mb: int, nb: int, wf: int, wa: int, B: int,
                         dtype, *, donate: bool = False):
         key = self._cache_key(("ell", mb, nb, wf, wa), B, dtype, donate)
-        k0 = jax.random.PRNGKey(0)
+        k0 = self._key_template()
         args = (self._sds((B, mb, wf), dtype),
                 self._sds((B, mb, wf), jnp.int32),
                 self._sds((B, nb, wa), dtype),
@@ -786,6 +805,12 @@ class BatchSolver:
         if sh is not None:
             arrays = [jax.device_put(a, sh) for a in arrays]
             keys = jax.device_put(keys, sh)
+        if self.transfer_sanitize:
+            # inputs are on device by now (the jnp.asarray stacking above
+            # is the one sanctioned upload); anything implicit past this
+            # point is a serving bug
+            with sanitize.no_implicit_transfers():
+                return exe(*arrays, keys)
         return exe(*arrays, keys)
 
     def _sparse_signature(self, lp: StandardLP):
@@ -853,7 +878,8 @@ class BatchSolver:
         stats = {"n_buckets": len(buckets), "n_local_buckets": len(mine),
                  "dense_stack_bytes": 0,
                  "sparse_stack_bytes": 0, "donated_buckets": 0,
-                 "dispatch_s": 0.0, "collect_s": 0.0}
+                 "dispatch_s": 0.0, "collect_s": 0.0, "compiles": 0}
+        compiles0 = sanitize.compile_counts()["compiles"]
         t0 = time.perf_counter()
         pending = []
         for ((mb, nb), sig), idxs in mine.items():
@@ -879,6 +905,8 @@ class BatchSolver:
             self._bucket_served(key, idxs, out)
         stats["collect_s"] = time.perf_counter() - t0
         self._gather_remote(remote, lps, results, stats)
+        stats["compiles"] = (sanitize.compile_counts()["compiles"]
+                             - compiles0)
         self.last_stream_stats = stats
         return results  # type: ignore[return-value]
 

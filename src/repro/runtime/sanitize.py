@@ -1,0 +1,143 @@
+"""Runtime sanitizers for the jitted solve paths.
+
+Two guards turn serving-stack performance contracts from timing
+inferences into hard, assertable checks:
+
+* :class:`CompileGuard` — counts XLA traces/compilations via
+  ``jax.monitoring`` duration events.  A warm ``solve_stream`` pass over
+  a bucket mix it has served before must compile **zero** new
+  executables; wrapping the pass in ``CompileGuard(max_compiles=0)``
+  makes any silent cache miss (a forgotten ``opts_static`` field, a
+  drifting shape signature) raise :class:`RecompileError` instead of
+  just showing up as a latency blip.
+
+* :func:`no_implicit_transfers` — a ``jax.transfer_guard``-based
+  context: any *implicit* host<->device transfer inside (a traced
+  ``float()``/``.item()``, a numpy array silently uploaded per call)
+  raises immediately.  This is the runtime twin of jaxlint rule R5.
+
+``BatchSolver.solve_stream`` reports the compile count of every pass in
+``last_stream_stats["compiles"]`` and can run its executables under the
+transfer guard (``BatchSolver(..., transfer_sanitize=True)``); the
+benchmark surfaces the warm counts in ``BENCH_stream.json`` where
+``bench_guard --max-warm-compiles 0`` gates them in CI.
+
+One module-level listener is registered lazily and never removed —
+``jax.monitoring`` has no unregister API, so guards snapshot the global
+counters instead of installing their own listeners.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+
+_counts = {"compiles": 0, "traces": 0}
+_lock = threading.Lock()
+_installed = False
+
+
+def _listener(event: str, duration_secs: float, **_kw) -> None:
+    if event == COMPILE_EVENT:
+        with _lock:
+            _counts["compiles"] += 1
+    elif event == TRACE_EVENT:
+        with _lock:
+            _counts["traces"] += 1
+
+
+def install() -> bool:
+    """Register the global compile listener (idempotent).
+
+    Returns True when the listener is active.  On a JAX without the
+    monitoring API the counters simply stay at zero — guards still work,
+    they just cannot detect recompiles (``supported()`` reports this).
+    """
+    global _installed
+    if _installed:
+        return True
+    register = getattr(getattr(jax, "monitoring", None),
+                       "register_event_duration_secs_listener", None)
+    if register is None:
+        return False
+    register(_listener)
+    _installed = True
+    return True
+
+
+def supported() -> bool:
+    """True when compile counting is actually wired into this JAX."""
+    return install()
+
+
+def compile_counts() -> dict:
+    """Snapshot of the process-lifetime {compiles, traces} counters."""
+    install()
+    with _lock:
+        return dict(_counts)
+
+
+class RecompileError(RuntimeError):
+    """A guarded region compiled more executables than its budget."""
+
+
+class CompileGuard:
+    """Count traces/compiles across a ``with`` region.
+
+    >>> with CompileGuard(max_compiles=0) as guard:
+    ...     solver.solve_stream(lps)      # warm: must not compile
+    >>> guard.compiles
+    0
+
+    ``max_compiles=None`` only counts; an int budget raises
+    :class:`RecompileError` on exit when exceeded.
+    """
+
+    def __init__(self, max_compiles: Optional[int] = None,
+                 label: str = "guarded region"):
+        self.max_compiles = max_compiles
+        self.label = label
+        self.compiles = 0
+        self.traces = 0
+        self._start: Optional[dict] = None
+
+    def __enter__(self) -> "CompileGuard":
+        install()
+        self._start = compile_counts()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        end = compile_counts()
+        self.compiles = end["compiles"] - self._start["compiles"]
+        self.traces = end["traces"] - self._start["traces"]
+        if exc_type is None and self.max_compiles is not None and \
+                self.compiles > self.max_compiles:
+            raise RecompileError(
+                f"{self.label}: {self.compiles} XLA compilation(s), "
+                f"budget {self.max_compiles} — an executable cache "
+                "missed (stale opts_static field? drifting shape "
+                "signature?)")
+        return False
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """Raise on any implicit host<->device transfer inside the region.
+
+    Thin wrapper over ``jax.transfer_guard("disallow")`` (no-op on JAX
+    versions without it).  Explicit transfers — ``jax.device_put``,
+    ``np.asarray(device_array)`` on CPU — stay allowed: the guard traps
+    exactly the *accidental* per-call uploads and traced host syncs
+    jaxlint rule R5 flags statically.
+    """
+    guard = getattr(jax, "transfer_guard", None)
+    if guard is None:
+        yield
+        return
+    with guard("disallow"):
+        yield

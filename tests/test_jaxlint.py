@@ -1,0 +1,161 @@
+"""jaxlint: every rule fires on the fixture reproducing its historical
+bug, stays quiet on the fixed code, honours pragmas — and the repo
+itself lints clean (the CI gate, asserted here so a local run catches a
+new violation before CI does)."""
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT))     # tools/ is not on PYTHONPATH=src
+
+from tools.jaxlint import (  # noqa: E402
+    Config,
+    lint_file,
+    lint_paths,
+    lint_source,
+)
+
+FIXTURES = REPO_ROOT / "tools" / "jaxlint" / "fixtures"
+# fixtures exercise R5's hot-path scoping by declaring themselves hot
+FIXTURE_CFG = Config(hot_paths=("fixtures/",))
+
+# rule -> (bad fixture finding count, historical bug it reproduces)
+EXPECTED = {
+    "R1": 1,    # sparse_kernel shipped without an opts_static entry
+    "R2": 2,    # PRNGKey(0) in _solve_jit_core + k3 reused twice
+    "R3": 1,    # time.time() duration in the benchmark harness
+    "R4": 2,    # Python while/if on jnp values under jit
+    "R5": 3,    # float()/.item()/np.asarray in a traced hot path
+}
+
+
+@pytest.mark.parametrize("rule", sorted(EXPECTED))
+def test_rule_fires_on_historical_bug_fixture(rule):
+    findings = lint_file(FIXTURES / f"{rule.lower()}_bad.py", FIXTURE_CFG)
+    assert [f.rule for f in findings] == [rule] * EXPECTED[rule], findings
+
+
+@pytest.mark.parametrize("rule", sorted(EXPECTED))
+def test_rule_quiet_on_fixed_fixture(rule):
+    findings = lint_file(FIXTURES / f"{rule.lower()}_good.py", FIXTURE_CFG)
+    assert findings == [], findings
+
+
+def test_pragma_suppresses_and_is_rule_specific():
+    src = textwrap.dedent("""\
+        import time
+        t0 = time.time()
+        wall = time.time() - t0  # jaxlint: disable=R3
+        wall2 = time.time() - t0  # jaxlint: disable=R2
+    """)
+    findings = lint_source(src, "x.py")
+    # the R3 pragma eats line 3; the R2 pragma on line 4 does NOT
+    assert [(f.rule, f.line) for f in findings] == [("R3", 4)]
+
+
+def test_r1_missing_allowlist_is_one_finding():
+    src = textwrap.dedent("""\
+        import dataclasses
+
+        @dataclasses.dataclass
+        class FooOptions:
+            a: int = 1
+            b: int = 2
+
+        def opts_static(opts):
+            return (opts.a,)
+    """)
+    findings = lint_source(src, "m.py")
+    assert len(findings) == 1 and "DYNAMIC_FIELDS" in findings[0].message
+
+
+def test_r1_stale_and_double_listed_entries():
+    src = textwrap.dedent("""\
+        import dataclasses
+
+        @dataclasses.dataclass
+        class FooOptions:
+            a: int = 1
+            b: int = 2
+
+        DYNAMIC_FIELDS = ("a", "b", "ghost")
+
+        def opts_static(opts):
+            return (opts.a,)
+    """)
+    msgs = [f.message for f in lint_source(src, "m.py")]
+    assert any("ghost" in m and "stale" in m for m in msgs)
+    assert any("FooOptions.a" in m and "remove it" in m for m in msgs)
+    # b is correctly allowlisted: no finding mentions it alone
+    assert not any("FooOptions.b" in m for m in msgs)
+
+
+def test_r2_hardcoded_key_allowed_in_test_trees():
+    src = "import jax\nk = jax.random.PRNGKey(0)\n"
+    assert lint_source(src, "tests/test_x.py") == []
+    assert len(lint_source(src, "src/repro/x.py")) == 1
+
+
+def test_r2_branch_arms_do_not_alias():
+    # draws in mutually exclusive if/else arms share a key legitimately
+    src = textwrap.dedent("""\
+        import jax
+
+        def f(key, flag, shape):
+            if flag:
+                return jax.random.normal(key, shape)
+            else:
+                return jax.random.uniform(key, shape)
+    """)
+    assert lint_source(src, "src/m.py") == []
+
+
+def test_r2_comparator_key_kwarg_is_not_a_prng_key():
+    src = textwrap.dedent("""\
+        def f(items, tag):
+            a = sorted(items, key=tag)
+            b = sorted(items, key=tag)
+            return a, b
+    """)
+    assert lint_source(src, "src/m.py") == []
+
+
+def test_r4_requires_traced_context():
+    # same control flow outside any jit-reachable function: quiet
+    src = textwrap.dedent("""\
+        import jax.numpy as jnp
+
+        def host_fn(x):
+            if jnp.sum(x) > 0:
+                return -x
+            return x
+    """)
+    assert lint_source(src, "src/m.py") == []
+
+
+def test_r5_scoped_to_hot_paths():
+    src = textwrap.dedent("""\
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x + 1)
+    """)
+    assert lint_source(src, "src/repro/core/engine.py") != []
+    assert lint_source(src, "src/repro/launch/train.py") == []
+
+
+def test_repo_lints_clean():
+    """The CI gate: src/tests/benchmarks carry zero undisabled findings."""
+    paths = [REPO_ROOT / d for d in ("src", "tests", "benchmarks")]
+    assert lint_paths(paths) == []
+
+
+def test_cli_exit_codes():
+    from tools.jaxlint.__main__ import main
+    assert main(["--list-rules"]) == 0
+    assert main([str(FIXTURES / "r3_good.py")]) == 0
+    assert main([str(FIXTURES / "r3_bad.py")]) == 1

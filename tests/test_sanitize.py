@@ -1,0 +1,108 @@
+"""Runtime sanitizers: compile counting, the zero-recompile warm-stream
+contract, and the implicit-transfer guard over the jitted solve paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PDHGOptions, solve_jit
+from repro.lp import random_standard_lp
+from repro.runtime import BatchSolver, CompileGuard, RecompileError
+from repro.runtime import sanitize
+
+OPTS = PDHGOptions(max_iters=2000, tol=1e-6, check_every=64)
+
+
+def _stream(shapes, seed0=0):
+    return [random_standard_lp(m, n, seed=seed0 + i)
+            for i, (m, n) in enumerate(shapes)]
+
+
+# ------------------------------------------------------ compile guard ---
+
+def test_compile_counter_sees_cold_and_not_warm():
+    if not sanitize.supported():
+        pytest.skip("jax.monitoring not available")
+
+    @jax.jit
+    def f(x):
+        return x * 3 + 1
+
+    with CompileGuard() as cold:
+        f(jnp.ones(7)).block_until_ready()
+    assert cold.compiles > 0
+    with CompileGuard(max_compiles=0) as warm:
+        f(jnp.ones(7)).block_until_ready()
+    assert warm.compiles == 0
+
+
+def test_compile_guard_raises_over_budget():
+    if not sanitize.supported():
+        pytest.skip("jax.monitoring not available")
+    with pytest.raises(RecompileError, match="budget 0"):
+        with CompileGuard(max_compiles=0):
+            # a never-seen shape forces a fresh executable
+            jax.jit(lambda x: x - 2)(jnp.ones(11)).block_until_ready()
+
+
+def test_warm_stream_compiles_zero():
+    """The executable-cache contract as a hard check: a second
+    solve_stream over an identical bucket mix compiles NOTHING."""
+    if not sanitize.supported():
+        pytest.skip("jax.monitoring not available")
+    solver = BatchSolver(OPTS)
+    shapes = [(5, 6), (6, 8), (10, 12), (5, 6), (7, 8)]
+    solver.solve_stream(_stream(shapes))
+    assert solver.last_stream_stats["compiles"] > 0     # cold pass
+    with CompileGuard(max_compiles=0, label="warm solve_stream"):
+        # same bucket mix from different instances: keys/operands are
+        # fresh, only the (bucket, B, dtype, opts) signatures repeat
+        solver.solve_stream(_stream(shapes, seed0=100))
+    assert solver.last_stream_stats["compiles"] == 0
+
+
+# ----------------------------------------------------- transfer guard ---
+
+def _transfer_guard_available():
+    return getattr(jax, "transfer_guard", None) is not None
+
+
+def test_transfer_guard_catches_implicit_transfer():
+    if not _transfer_guard_available():
+        pytest.skip("jax.transfer_guard not available")
+    x = jnp.arange(4.0)
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with sanitize.no_implicit_transfers():
+            float(x[0])     # traced-value host sync: implicit d2h
+
+
+def test_transfer_guard_allows_device_side_work():
+    f = jax.jit(lambda v: v * 2)
+    x = jnp.ones(5)
+    f(x).block_until_ready()       # compile (and constant upload) first
+    with sanitize.no_implicit_transfers():
+        y = f(x)
+        y.block_until_ready()
+    assert float(y[0]) == 2.0      # sync OUTSIDE the guard is fine
+
+
+def test_solve_jit_core_is_transfer_clean():
+    """``solve_jit(..., transfer_sanitize=True)`` runs the jitted
+    iteration core under the guard: a solve must not smuggle any
+    implicit host<->device transfer once its inputs are device
+    resident."""
+    if not _transfer_guard_available():
+        pytest.skip("jax.transfer_guard not available")
+    lp = random_standard_lp(6, 9, seed=3)
+    solve_jit(lp, OPTS)            # compile + upload outside the guard
+    res = solve_jit(lp, OPTS, transfer_sanitize=True)
+    assert res.status in ("optimal", "iteration_limit")
+
+
+def test_batch_solver_transfer_sanitize_serves_clean():
+    solver = BatchSolver(OPTS, transfer_sanitize=True)
+    shapes = [(5, 6), (6, 8), (5, 6)]
+    for seed0 in (0, 50):          # cold then warm, both guarded
+        results = solver.solve_stream(_stream(shapes, seed0=seed0))
+        assert all(np.isfinite(r.merit) for r in results)
+        assert all(r.bucket for r in results)

@@ -1,0 +1,1 @@
+"""Developer tooling (not shipped with ``repro``): jaxlint static analysis."""

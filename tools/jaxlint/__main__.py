@@ -1,0 +1,57 @@
+"""CLI: ``python -m tools.jaxlint [paths...]``.
+
+Walks ``*.py`` under each path (default: ``src tests benchmarks``),
+prints findings as ``path:line: RULE message``, and exits 1 when any
+undisabled finding remains.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import DEFAULT_CONFIG, RULE_IDS, RULE_SUMMARIES, Config, \
+    iter_python_files, lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.jaxlint",
+        description="repo-specific JAX static analysis "
+                    "(see tools/jaxlint/__init__.py for the rules)")
+    ap.add_argument("paths", nargs="*",
+                    default=["src", "tests", "benchmarks"],
+                    help="files or directories to lint "
+                         "(default: src tests benchmarks)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run "
+                         f"(default: all of {','.join(RULE_IDS)})")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in RULE_IDS:
+            print(f"{rid}  {RULE_SUMMARIES[rid]}")
+        return 0
+
+    cfg = DEFAULT_CONFIG
+    if args.select:
+        selected = frozenset(r.strip().upper()
+                             for r in args.select.split(",") if r.strip())
+        unknown = selected - set(RULE_IDS)
+        if unknown:
+            ap.error(f"unknown rule ids: {sorted(unknown)}")
+        cfg = Config(select=selected)
+
+    files = iter_python_files(args.paths)
+    findings = lint_paths(args.paths, cfg)
+    for f in findings:
+        print(f)
+    n = len(findings)
+    print(f"jaxlint: {n} finding{'s' if n != 1 else ''} "
+          f"in {len(files)} files", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

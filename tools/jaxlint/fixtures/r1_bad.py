@@ -1,0 +1,22 @@
+"""R1 fixture (BAD): the PR 6 bug — ``sparse_kernel`` added to the
+options dataclass without an ``opts_static`` entry, so executables
+compiled for the ELL backend could be served cache-hits meant for BCOO.
+The allowlist exists but nobody decided ``sparse_kernel``'s fate."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PDHGOptions:
+    max_iters: int = 1000
+    tol: float = 1e-6
+    kernel: str = "jnp"
+    sparse_kernel: str = "ell"      # <- forgotten by opts_static below
+    seed: int = 0
+
+DYNAMIC_FIELDS = ("seed",)
+
+
+def opts_static(opts):
+    # "keep in sync ... and nowhere else" — the comment-enforced
+    # invariant this rule mechanizes
+    return (opts.max_iters, opts.tol, opts.kernel)

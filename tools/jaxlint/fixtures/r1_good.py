@@ -1,0 +1,20 @@
+"""R1 fixture (GOOD): every option field is either consumed by
+``opts_static`` (part of the executable cache key) or declared dynamic
+in ``DYNAMIC_FIELDS``."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PDHGOptions:
+    max_iters: int = 1000
+    tol: float = 1e-6
+    kernel: str = "jnp"
+    sparse_kernel: str = "ell"
+    seed: int = 0
+
+# fields that deliberately do NOT enter the compiled-executable cache key
+DYNAMIC_FIELDS = ("seed",)
+
+
+def opts_static(opts):
+    return (opts.max_iters, opts.tol, opts.kernel, opts.sparse_kernel)

@@ -1,0 +1,20 @@
+"""R2 fixture (BAD): both real PR 2 bugs.
+
+(a) ``_solve_jit_core`` ignores its caller-threaded key in favour of a
+    hardcoded ``PRNGKey(0)`` — every instance in a batch drew identical
+    restart noise.
+(b) ``k3`` feeds two normal draws with no intervening split — the
+    averaged-iterate MVM perturbations were perfectly correlated.
+"""
+import jax
+
+
+def _solve_jit_core(A, b, key):
+    key = jax.random.PRNGKey(0)          # (a) caller key discarded
+    return jax.random.normal(key, b.shape)
+
+
+def restart_check(x_avg, y_avg, k3):
+    nx = jax.random.normal(k3, x_avg.shape)
+    ny = jax.random.normal(k3, y_avg.shape)   # (b) k3 reused, no split
+    return nx, ny

@@ -1,0 +1,22 @@
+"""R2 fixture (GOOD): caller key threaded through; distinct subkeys per
+draw via ``split``."""
+import jax
+
+
+def _solve_jit_core(A, b, key):
+    return jax.random.normal(key, b.shape)
+
+
+def restart_check(x_avg, y_avg, k3):
+    ka, kb = jax.random.split(k3)
+    nx = jax.random.normal(ka, x_avg.shape)
+    ny = jax.random.normal(kb, y_avg.shape)
+    return nx, ny
+
+
+def sequential_refresh(key, shape):
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, shape)
+    key, sub = jax.random.split(key)      # rebinding refreshes 'sub'
+    b = jax.random.normal(sub, shape)
+    return a + b

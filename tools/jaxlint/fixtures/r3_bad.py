@@ -1,0 +1,12 @@
+"""R3 fixture (BAD): the timing pattern PR 6 fixed in
+``stream_throughput.py`` but missed in four other files — wall-clock
+``time.time()`` feeding a duration subtraction.  An NTP step makes the
+reported duration negative or garbage."""
+import time
+
+
+def bench(fn):
+    t0 = time.time()
+    fn()
+    wall = time.time() - t0        # duration from non-monotonic clock
+    return wall

@@ -1,0 +1,19 @@
+"""R3 fixture (GOOD): durations use the monotonic ``perf_counter``;
+absolute wall-clock stamps (no subtraction) remain fine."""
+import time
+
+
+def bench(fn):
+    t0 = time.perf_counter()
+    fn()
+    wall = time.perf_counter() - t0
+    return wall
+
+
+def poll(ready, budget_s=60.0):
+    # absolute deadline comparison, not a duration subtraction: quiet
+    deadline = time.time() + budget_s
+    while time.time() < deadline:
+        if ready():
+            return True
+    return False

@@ -1,0 +1,17 @@
+"""R4 fixture (BAD): Python control flow on a traced value.  The real
+seed bug: ``restart_beta = 0.0`` encoded "no restart" and the jitted
+comparison only *appeared* to work because ``0.0 * inf`` is NaN and NaN
+comparisons are false — a trace-time accident, not a decision."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pdhg_residual_loop(x, tol):
+    residual = jnp.linalg.norm(x)
+    while jnp.max(residual) > tol:       # TracerBoolConversionError
+        x = x * 0.5
+        residual = jnp.linalg.norm(x)
+    if jnp.sum(x) > 0:                   # ditto for `if`
+        x = -x
+    return x

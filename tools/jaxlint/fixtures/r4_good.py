@@ -1,0 +1,25 @@
+"""R4 fixture (GOOD): the same loop expressed with ``lax.while_loop``
+and ``jnp.where`` — control flow staged into the computation graph."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def pdhg_residual_loop(x, tol):
+    def cond(x):
+        return jnp.linalg.norm(x) > tol
+
+    def body(x):
+        return x * 0.5
+
+    x = lax.while_loop(cond, body, x)
+    return jnp.where(jnp.sum(x) > 0, -x, x)
+
+
+def host_driver(x, tol):
+    # NOT traced (no jit decorator, not an entry point): Python control
+    # flow on concrete values is fine here.
+    if jnp.sum(x) > 0:
+        return -x
+    return x

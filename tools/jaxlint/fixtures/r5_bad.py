@@ -1,0 +1,15 @@
+"""R5 fixture (BAD): implicit device->host syncs inside a traced
+hot-path function — each ``.item()`` / ``float()`` / ``np.asarray``
+blocks async dispatch and round-trips through the host, destroying the
+latency win batched serving exists for."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def merit_check(x, y):
+    merit = float(jnp.linalg.norm(x) + jnp.linalg.norm(y))  # host sync
+    gap = (x @ y).item()                                    # host sync
+    host = np.asarray(x)                                    # host copy
+    return merit + gap + host.sum()

@@ -3,26 +3,36 @@
 CI runs this right after the smoke stream benchmark:
 
   1. **Schema validation** — the candidate record must be
-     ``bench_stream/v5``: every serving path (dense batched /
+     ``bench_stream/v6``: every serving path (dense batched /
      per-instance, crossbar batched / per-instance, the three sparse
      backends — default ELL, nnz-bucketed BCOO, ELL + fused
      multi-iteration megakernel — and the densified sparse baseline,
-     async + sync dispatch, per-pod routed cluster serving) present
-     with finite numeric ``cold_s``/``warm_s``/``mvm_total``, plus the
+     async + sync dispatch, per-pod routed cluster serving, the
+     adaptive step rule on the imbalanced acceptance stream, and the
+     norm-reuse seeded second pass) present with finite numeric
+     ``cold_s``/``warm_s``/``mvm_total`` AND a finite per-instance
+     ``iterations_to_tol`` {median, p90} distribution, plus the
      ``sparse`` host-memory summary, the ``cluster`` routing summary
-     (non-empty routing table, per-pod throughput shares), and the
-     ``sanitize`` section (per-path warm-pass XLA compile counts from
-     ``repro.runtime.sanitize``).
+     (non-empty routing table, per-pod throughput shares), the
+     ``adaptive`` iteration-reduction summary, the ``norm_reuse``
+     summary, and the ``sanitize`` section (per-path warm-pass XLA
+     compile counts from ``repro.runtime.sanitize``).
   2. **Regression gate** — the warm BUCKETED paths (the steady-state
      serving numbers) must not regress more than ``--max-regression``
      (default 2x) against the committed baseline
-     (``git show HEAD:BENCH_stream.json`` in CI).  v1-v4 baselines are
+     (``git show HEAD:BENCH_stream.json`` in CI).  v1-v5 baselines are
      accepted: only the path keys both records share are compared.
   3. **Sparse-wins gate** — the acceptance criterion of the ELL
      backend: the default sparse pipeline's warm serving must be at
      least ``--min-sparse-speedup`` (default 1x) as fast as the
      densified dense baseline on the same >=95%-sparse stream.
-  4. **Zero-recompile gate** — with ``--max-warm-compiles N`` (CI
+  4. **Iteration-reduction gate** — with ``--min-iter-reduction R``,
+     the adaptive step rule's median per-instance iteration reduction
+     over the fixed rule (same scale-imbalanced stream, same tol) must
+     be at least R, and no adaptive instance may have failed to reach
+     the tol the fixed rule was asked for.  Skipped when R is omitted
+     or the record predates the ``adaptive`` section.
+  5. **Zero-recompile gate** — with ``--max-warm-compiles N`` (CI
      passes 0), every warm batched pass must have compiled at most N
      fresh XLA executables.  A violation means an executable-cache key
      drifted (stale ``opts_static`` field, unstable bucket signature).
@@ -41,9 +51,9 @@ import json
 import math
 import sys
 
-SCHEMA = "bench_stream/v5"
+SCHEMA = "bench_stream/v6"
 
-# every serving path a v5 record must carry
+# every serving path a v6 record must carry
 REQUIRED_PATHS = (
     "exact_batched",
     "exact_per_instance",
@@ -57,8 +67,17 @@ REQUIRED_PATHS = (
     "exact_batched_async",
     "exact_batched_sync",
     "exact_routed",
+    "exact_adaptive",
+    "exact_norm_reuse",
 )
 PATH_FIELDS = ("cold_s", "warm_s", "mvm_total")
+ITER_FIELDS = ("median", "p90")      # per-path iterations_to_tol (v6)
+ADAPTIVE_FIELDS = ("iter_reduction_median", "iter_reduction_p10",
+                   "n_unconverged_fixed", "n_unconverged_adaptive",
+                   "max_merit_adaptive", "tol")
+NORM_REUSE_FIELDS = ("norm_seeded_buckets", "cache_entries",
+                     "mvm_total_cold", "mvm_total_warm",
+                     "max_rel_disagreement_vs_cold")
 SPARSE_FIELDS = ("density", "host_stack_bytes_dense",
                  "host_stack_bytes_sparse", "host_mem_improvement",
                  "speedup_warm", "speedup_warm_bcoo",
@@ -73,7 +92,8 @@ GUARDED_WARM_PATHS = ("exact_batched", "crossbar_batched", "sparse_batched",
                       "exact_routed")
 
 # warm passes whose XLA compile counts the sanitize section must carry
-SANITIZE_PATHS = ("exact_batched", "sparse_batched", "crossbar_batched")
+SANITIZE_PATHS = ("exact_batched", "sparse_batched", "crossbar_batched",
+                  "adaptive_batched", "norm_reuse_batched")
 
 def _fail(msg: str) -> None:
     print(f"bench_guard: FAIL: {msg}", file=sys.stderr)
@@ -101,6 +121,33 @@ def validate_schema(bench: dict) -> None:
                       f"{entry.get(field)!r}")
             if entry[field] < 0:
                 _fail(f"paths.{name}.{field} is negative: {entry[field]}")
+        iters = entry.get("iterations_to_tol")
+        if not isinstance(iters, dict):
+            _fail(f"paths.{name}.iterations_to_tol missing (v6 requires "
+                  f"a median/p90 distribution per path)")
+        for field in ITER_FIELDS:
+            if not _finite_number(iters.get(field)) or iters[field] <= 0:
+                _fail(f"paths.{name}.iterations_to_tol.{field} is not a "
+                      f"positive finite number: {iters.get(field)!r}")
+    adaptive = bench.get("adaptive")
+    if not isinstance(adaptive, dict):
+        _fail("missing 'adaptive' summary")
+    for field in ADAPTIVE_FIELDS:
+        if not _finite_number(adaptive.get(field)):
+            _fail(f"adaptive.{field} is not a finite number: "
+                  f"{adaptive.get(field)!r}")
+    for leg in ("iters_fixed", "iters_adaptive"):
+        d = adaptive.get(leg)
+        if not isinstance(d, dict) \
+                or not all(_finite_number(d.get(f)) for f in ITER_FIELDS):
+            _fail(f"adaptive.{leg} must carry finite median/p90")
+    reuse = bench.get("norm_reuse")
+    if not isinstance(reuse, dict):
+        _fail("missing 'norm_reuse' summary")
+    for field in NORM_REUSE_FIELDS:
+        if not _finite_number(reuse.get(field)):
+            _fail(f"norm_reuse.{field} is not a finite number: "
+                  f"{reuse.get(field)!r}")
     sparse = bench.get("sparse")
     if not isinstance(sparse, dict):
         _fail("missing 'sparse' summary")
@@ -179,6 +226,27 @@ def check_sparse_wins(candidate: dict, min_speedup: float) -> None:
               f"baseline (>= {min_speedup}x required)")
 
 
+def check_iter_reduction(candidate: dict, min_reduction: float) -> None:
+    """Acceptance criterion of the adaptive step rule: median
+    per-instance iteration reduction over fixed on the imbalanced
+    stream, at the SAME tol (unconverged adaptive instances fail the
+    gate outright — a reduction bought by stopping early is no
+    reduction)."""
+    ad = candidate["adaptive"]
+    red = ad["iter_reduction_median"]
+    unconv = ad["n_unconverged_adaptive"]
+    status = "ok" if red >= min_reduction and unconv == 0 else "TOO SLOW"
+    print(f"bench_guard: adaptive median iteration reduction "
+          f"{red:.2f}x (p10 {ad['iter_reduction_p10']:.2f}x), "
+          f"{unconv} unconverged [{status}]")
+    if unconv > 0:
+        _fail(f"{unconv} adaptive instance(s) missed tol "
+              f"{ad['tol']:g} within the iteration budget")
+    if red < min_reduction:
+        _fail(f"adaptive median iteration reduction is only {red:.2f}x "
+              f"(>= {min_reduction}x required)")
+
+
 def check_warm_compiles(candidate: dict, max_compiles: int) -> None:
     """Zero-recompile gate: warm batched passes must stay compile-free."""
     san = candidate["sanitize"]
@@ -212,6 +280,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-warm-compiles", type=int, default=None,
                     help="max XLA compilations allowed in each warm "
                          "batched pass (CI passes 0; omit to skip)")
+    ap.add_argument("--min-iter-reduction", type=float, default=None,
+                    help="min required median iteration reduction of "
+                         "step_rule=adaptive over fixed on the "
+                         "imbalanced stream (omit to skip)")
     args = ap.parse_args(argv)
 
     with open(args.candidate) as f:
@@ -223,6 +295,8 @@ def main(argv=None) -> int:
         check_sparse_wins(candidate, args.min_sparse_speedup)
     if args.max_warm_compiles is not None:
         check_warm_compiles(candidate, args.max_warm_compiles)
+    if args.min_iter_reduction is not None:
+        check_iter_reduction(candidate, args.min_iter_reduction)
 
     if args.baseline:
         with open(args.baseline) as f:

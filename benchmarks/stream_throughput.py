@@ -20,19 +20,24 @@ Each timed path runs twice: COLD includes compilation, WARM is the
 steady-state serving cost (the number that matters for throughput).
 ``--kernel`` selects the engine's update backend (jnp vs fused Pallas).
 Besides the full record, every run emits ``BENCH_stream.json`` at the
-repo root (schema ``bench_stream/v5``: per-path warm/cold seconds +
-device-MVM totals — including the three sparse backends (``sparse_ell``
+repo root (schema ``bench_stream/v6``: per-path warm/cold seconds +
+device-MVM totals + per-instance ``iterations_to_tol`` distributions
+(median/p90) — including the three sparse backends (``sparse_ell``
 = the default row-blocked ELL pipeline, ``sparse_bcoo`` = nnz-bucketed
 COO, ``sparse_ell_mega`` = ELL with the fused multi-iteration
-megakernel), the async-vs-sync dispatch split and the per-pod ROUTED
-cluster path — plus a ``sparse`` host-memory summary, a ``cluster``
-summary with the routing table and per-pod throughput shares, and a
-``sanitize`` section recording the XLA compilation count of every warm
-batched pass) as the perf baseline for future PRs; CI uploads it and
-``benchmarks/bench_guard.py`` gates regressions against it, including
-the acceptance-criterion gate that the default sparse pipeline's warm
-serving is at least as fast as the densified baseline and the
-zero-recompile gate (``--max-warm-compiles 0``) on the warm passes.
+megakernel), the async-vs-sync dispatch split, the per-pod ROUTED
+cluster path, the ``exact_adaptive`` step-rule path on a scale-
+imbalanced acceptance stream and the ``exact_norm_reuse`` seeded
+second pass — plus ``sparse``/``cluster`` summaries, an ``adaptive``
+summary with the fixed-vs-adaptive iteration-reduction statistics, a
+``norm_reuse`` summary, and a ``sanitize`` section recording the XLA
+compilation count of every warm batched pass) as the perf baseline for
+future PRs; CI uploads it and ``benchmarks/bench_guard.py`` gates
+regressions against it, including the acceptance-criterion gates that
+the default sparse pipeline's warm serving is at least as fast as the
+densified baseline, that the adaptive rule's median iteration reduction
+stays above ``--min-iter-reduction``, and the zero-recompile gate
+(``--max-warm-compiles 0``) on the warm passes.
 """
 from __future__ import annotations
 
@@ -60,6 +65,28 @@ def build_stream(n_instances: int, shapes, seed: int = 0):
         m, n = shapes[i % len(shapes)]
         lps.append(random_standard_lp(m, n, seed=seed + i))
     return lps
+
+
+def build_imbalanced_stream(n_instances: int, shapes, seed: int = 0):
+    """Objective/rhs scale-imbalanced variants of the mixed stream: c is
+    scaled by 100 or 0.01 alternately.  Ruiz equilibration of K cannot
+    see the mismatch; the adaptive rule's primal weight can — this is
+    the stream the ``adaptive`` acceptance gate measures on."""
+    import dataclasses
+
+    lps = build_stream(n_instances, shapes, seed=seed)
+    return [dataclasses.replace(lp, c=lp.c * (100.0 if i % 2 == 0
+                                              else 0.01))
+            for i, lp in enumerate(lps)]
+
+
+def _iter_stats(results):
+    """{median, p90} of per-instance iteration counts (iterations to the
+    requested tol; iteration-limited instances are included as-is, i.e.
+    censored at max_iters)."""
+    its = [int(getattr(r, "result", r).iterations) for r in results]
+    return {"median": float(np.median(its)),
+            "p90": float(np.percentile(its, 90))}
 
 
 def _sum_ledgers(reports):
@@ -113,6 +140,8 @@ def bench_exact(lps, opts):
         "mvm_total_batched": int(sum(r.mvm_calls for r in results)),
         "mvm_total_per_instance": int(sum(r.mvm_calls
                                           for r in loop_results)),
+        "iters_batched": _iter_stats(results),
+        "iters_per_instance": _iter_stats(loop_results),
     }
 
 
@@ -195,6 +224,10 @@ def bench_sparse(lps, opts):
         "mvm_total_dense": int(sum(r.mvm_calls for r in dense_results)),
         "mvm_total_bcoo": int(sum(r.mvm_calls for r in bcoo_results)),
         "mvm_total_ell_mega": int(sum(r.mvm_calls for r in mega_results)),
+        "iters_sparse": _iter_stats(results),
+        "iters_dense": _iter_stats(dense_results),
+        "iters_bcoo": _iter_stats(bcoo_results),
+        "iters_ell_mega": _iter_stats(mega_results),
     }
 
 
@@ -229,6 +262,8 @@ def bench_async(lps, opts):
         "max_rel_disagreement_vs_sync": float(agree),
         "mvm_total_async": int(sum(r.mvm_calls for r in r_async)),
         "mvm_total_sync": int(sum(r.mvm_calls for r in r_sync)),
+        "iters_async": _iter_stats(r_async),
+        "iters_sync": _iter_stats(r_sync),
     }
 
 
@@ -298,6 +333,7 @@ def bench_cluster(lps, opts, n_pods: int = 2):
         "gather_s": st.get("gather_s", 0.0),
         "max_rel_disagreement_vs_unrouted": float(agree),
         "mvm_total_routed": int(sum(r.mvm_calls for r in results)),
+        "iters_routed": _iter_stats(results),
     }
 
 
@@ -350,6 +386,86 @@ def bench_device(lps, opts, device):
                                      for rep in reports)),
         "mvm_total_per_instance": int(sum(rep.result.mvm_calls
                                           for rep in loop_reports)),
+        "iters_batched": _iter_stats(reports),
+        "iters_per_instance": _iter_stats(loop_reports),
+    }
+
+
+def bench_adaptive(lps, opts):
+    """step_rule="adaptive" vs "fixed" on the scale-imbalanced stream —
+    the acceptance gate's measurement: per-instance iterations-to-tol
+    under both rules through the SAME BatchSolver serving path, plus the
+    warm/cold wall clock of the adaptive stream.
+
+    ``iter_reduction_median`` is the median of per-instance
+    fixed/adaptive iteration ratios; every adaptive instance must reach
+    the same tol (``n_unconverged_*`` records any censoring at
+    max_iters, which deflates the measured reduction rather than
+    inflating it)."""
+    import dataclasses
+
+    from repro.runtime import BatchSolver
+
+    timings = {}
+    solver_f = BatchSolver(opts)
+    t0 = time.perf_counter(); r_fixed = solver_f.solve_stream(lps)
+    timings["fixed_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); r_fixed = solver_f.solve_stream(lps)
+    timings["fixed_warm_s"] = time.perf_counter() - t0
+
+    solver_a = BatchSolver(dataclasses.replace(opts,
+                                               step_rule="adaptive"))
+    t0 = time.perf_counter(); r_adapt = solver_a.solve_stream(lps)
+    timings["adaptive_cold_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter(); r_adapt = solver_a.solve_stream(lps)
+    timings["adaptive_warm_s"] = time.perf_counter() - t0
+
+    ratios = [f.iterations / max(a.iterations, 1)
+              for f, a in zip(r_fixed, r_adapt)]
+    return {
+        **timings,
+        "iters_fixed": _iter_stats(r_fixed),
+        "iters_adaptive": _iter_stats(r_adapt),
+        "iter_reduction_median": float(np.median(ratios)),
+        "iter_reduction_p10": float(np.percentile(ratios, 10)),
+        "n_unconverged_fixed": int(sum(not r.converged for r in r_fixed)),
+        "n_unconverged_adaptive": int(sum(not r.converged
+                                          for r in r_adapt)),
+        "max_merit_adaptive": float(max(r.merit for r in r_adapt)),
+        "warm_compiles": solver_a.last_stream_stats["compiles"],
+        "speedup_warm": timings["fixed_warm_s"]
+        / max(timings["adaptive_warm_s"], 1e-12),
+        "mvm_total_fixed": int(sum(r.mvm_calls for r in r_fixed)),
+        "mvm_total_adaptive": int(sum(r.mvm_calls for r in r_adapt)),
+    }
+
+
+def bench_norm_reuse(lps, opts):
+    """Cross-instance norm reuse: pass 2 of the same stream is served by
+    the seeded executables (short power refine instead of full Lanczos).
+    Records the warm-pass compile count (must stay 0: the seeded twin is
+    compiled eagerly during the cold pass) and the per-pass MVM ledgers
+    whose delta is the reused Lanczos work."""
+    from repro.runtime import BatchSolver
+
+    solver = BatchSolver(opts, norm_reuse=True)
+    t0 = time.perf_counter(); r1 = solver.solve_stream(lps)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter(); r2 = solver.solve_stream(lps)
+    warm_s = time.perf_counter() - t0
+    agree = max(abs(a.obj - b.obj) / max(abs(b.obj), 1e-12)
+                for a, b in zip(r2, r1))
+    return {
+        "cold_s": cold_s,
+        "warm_s": warm_s,
+        "warm_compiles": solver.last_stream_stats["compiles"],
+        "norm_seeded_buckets":
+            solver.last_stream_stats["norm_seeded_buckets"],
+        "cache_entries": len(solver._norm_cache),
+        "mvm_total_cold": int(sum(r.mvm_calls for r in r1)),
+        "mvm_total_warm": int(sum(r.mvm_calls for r in r2)),
+        "max_rel_disagreement_vs_cold": float(agree),
+        "iters_warm": _iter_stats(r2),
     }
 
 
@@ -417,6 +533,17 @@ def main(argv=None):
         "cluster": bench_cluster(lps, opts, n_pods=args.pods),
     }
 
+    # the adaptive acceptance stream: scale-imbalanced instances with a
+    # generous iteration budget so the FIXED baseline is not censored at
+    # max_iters (censoring deflates the measured reduction)
+    import dataclasses
+    imb_lps = build_imbalanced_stream(min(n, 8 if args.smoke else 16),
+                                      shapes, seed=args.seed)
+    adapt_opts = dataclasses.replace(
+        opts, max_iters=max(max_iters, 20000 if args.smoke else 40000))
+    record["adaptive"] = bench_adaptive(imb_lps, adapt_opts)
+    record["norm_reuse"] = bench_norm_reuse(lps, opts)
+
     out = args.out or os.path.join(
         "experiments",
         "stream_throughput_smoke.json" if args.smoke
@@ -432,7 +559,7 @@ def main(argv=None):
     from repro.runtime import sanitize
 
     bench = {
-        "schema": "bench_stream/v5",
+        "schema": "bench_stream/v6",
         "kernel": args.kernel,
         "config": record["config"],
         # runtime-sanitizer surface: XLA compilations during each warm
@@ -444,6 +571,9 @@ def main(argv=None):
                 "exact_batched": record["exact"]["warm_compiles"],
                 "sparse_batched": record["sparse"]["warm_compiles"],
                 "crossbar_batched": record["crossbar"]["warm_compiles"],
+                "adaptive_batched": record["adaptive"]["warm_compiles"],
+                "norm_reuse_batched":
+                    record["norm_reuse"]["warm_compiles"],
             },
         },
         "paths": {
@@ -499,6 +629,19 @@ def main(argv=None):
                 "warm_s": record["cluster"]["routed_warm_s"],
                 "mvm_total": record["cluster"]["mvm_total_routed"],
             },
+            # v6: the adaptive step rule served on the imbalanced
+            # acceptance stream (its fixed-rule twin rides in the
+            # top-level "adaptive" section, same stream, same opts)
+            "exact_adaptive": {
+                "cold_s": record["adaptive"]["adaptive_cold_s"],
+                "warm_s": record["adaptive"]["adaptive_warm_s"],
+                "mvm_total": record["adaptive"]["mvm_total_adaptive"],
+            },
+            "exact_norm_reuse": {
+                "cold_s": record["norm_reuse"]["cold_s"],
+                "warm_s": record["norm_reuse"]["warm_s"],
+                "mvm_total": record["norm_reuse"]["mvm_total_warm"],
+            },
         },
         "cluster": {
             "n_pods": record["cluster"]["n_pods"],
@@ -507,6 +650,33 @@ def main(argv=None):
             "rerouted_buckets": record["cluster"]["rerouted_buckets"],
             "max_rel_disagreement_vs_unrouted":
                 record["cluster"]["max_rel_disagreement_vs_unrouted"],
+        },
+        # v6: per-instance iteration-count distributions per path — the
+        # iteration-reduction gate reads these, and cross-PR drift in
+        # them flags algorithmic (not wall-clock) regressions
+        "adaptive": {
+            "iter_reduction_median":
+                record["adaptive"]["iter_reduction_median"],
+            "iter_reduction_p10":
+                record["adaptive"]["iter_reduction_p10"],
+            "iters_fixed": record["adaptive"]["iters_fixed"],
+            "iters_adaptive": record["adaptive"]["iters_adaptive"],
+            "n_unconverged_fixed":
+                record["adaptive"]["n_unconverged_fixed"],
+            "n_unconverged_adaptive":
+                record["adaptive"]["n_unconverged_adaptive"],
+            "max_merit_adaptive":
+                record["adaptive"]["max_merit_adaptive"],
+            "tol": adapt_opts.tol,
+        },
+        "norm_reuse": {
+            "norm_seeded_buckets":
+                record["norm_reuse"]["norm_seeded_buckets"],
+            "cache_entries": record["norm_reuse"]["cache_entries"],
+            "mvm_total_cold": record["norm_reuse"]["mvm_total_cold"],
+            "mvm_total_warm": record["norm_reuse"]["mvm_total_warm"],
+            "max_rel_disagreement_vs_cold":
+                record["norm_reuse"]["max_rel_disagreement_vs_cold"],
         },
         "sparse": {
             "density": record["sparse"]["density"],
@@ -522,6 +692,26 @@ def main(argv=None):
                 record["sparse"]["speedup_warm_ell_mega"],
         },
     }
+    # v6: every path entry carries its iterations-to-tol distribution
+    iters_map = {
+        "exact_batched": record["exact"]["iters_batched"],
+        "exact_per_instance": record["exact"]["iters_per_instance"],
+        "crossbar_batched": record["crossbar"]["iters_batched"],
+        "crossbar_per_instance": record["crossbar"]["iters_per_instance"],
+        "sparse_batched": record["sparse"]["iters_sparse"],
+        "sparse_batched_dense": record["sparse"]["iters_dense"],
+        "sparse_ell": record["sparse"]["iters_sparse"],
+        "sparse_bcoo": record["sparse"]["iters_bcoo"],
+        "sparse_ell_mega": record["sparse"]["iters_ell_mega"],
+        "exact_batched_async": record["async"]["iters_async"],
+        "exact_batched_sync": record["async"]["iters_sync"],
+        "exact_routed": record["cluster"]["iters_routed"],
+        "exact_adaptive": record["adaptive"]["iters_adaptive"],
+        "exact_norm_reuse": record["norm_reuse"]["iters_warm"],
+    }
+    for name, st in iters_map.items():
+        bench["paths"][name]["iterations_to_tol"] = st
+
     bench_out = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_stream.json")
     with open(bench_out, "w") as f:
@@ -561,6 +751,20 @@ def main(argv=None):
           f"{r['n_pods']} pods | {pods} | rerouted "
           f"{r['rerouted_buckets']} | max disagreement "
           f"{r['max_rel_disagreement_vs_unrouted']:.2e}")
+    r = record["adaptive"]
+    print(f"[adaptive] fixed median {r['iters_fixed']['median']:.0f} it"
+          f" (p90 {r['iters_fixed']['p90']:.0f})"
+          f" | adaptive median {r['iters_adaptive']['median']:.0f} it"
+          f" (p90 {r['iters_adaptive']['p90']:.0f})"
+          f" | reduction {r['iter_reduction_median']:.2f}x"
+          f" (p10 {r['iter_reduction_p10']:.2f}x)"
+          f" | unconverged fixed/adaptive "
+          f"{r['n_unconverged_fixed']}/{r['n_unconverged_adaptive']}")
+    r = record["norm_reuse"]
+    print(f"[norm_reuse] seeded buckets {r['norm_seeded_buckets']}"
+          f" | cache entries {r['cache_entries']}"
+          f" | mvms {r['mvm_total_cold']} -> {r['mvm_total_warm']}"
+          f" | warm compiles {r['warm_compiles']}")
     led = record["crossbar"]["ledger_batched"]
     print(f"[crossbar] stream write={led['write_energy_j']:.3f}J "
           f"(padding {led['write_energy_padding_j']:.3f}J) "

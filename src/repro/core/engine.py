@@ -47,6 +47,23 @@ from .symblock import MODE_AX, MODE_ATY, matmul_accel
 
 KERNELS = ("jnp", "pallas")
 SPARSE_KERNELS = ("ell", "bcoo")
+STEP_RULES = ("fixed", "adaptive", "strongly_convex")
+
+# Adaptive step-rule tuning (``step_rule="adaptive"``): log-space
+# smoothing weight for the PDLP primal-weight updates, and the trust
+# region confining the weight around its data-driven initial value.
+# Rebalancing happens ONLY at check boundaries (weight moves at restart
+# events, the down-only scale safeguard at every boundary), so within a
+# ``check_every`` window tau/sigma are constants and the fused
+# megakernel window stays a single launch.  The step-scale product
+# sqrt(tau*sigma) is never grown past the global-norm value: for the
+# bilinear saddle dynamics tau*sigma*rho^2 <= eta^2 is NECESSARY (the
+# dual is unconstrained, so overshoot diverges along the top singular
+# pair) — adaptivity lives entirely in the primal/dual SPLIT of the
+# budget plus the downside safeguard.
+ADAPT_SMOOTH = 0.5         # exp(s*log(target) + (1-s)*log(old))
+ADAPT_OMEGA_CLIP = 1024.0  # omega confined to [omega0/1024, omega0*1024]
+_ADAPT_TINY = 1e-30        # degenerate-movement / div-by-zero guard
 
 
 # ---------------------------------------------------------------- state ---
@@ -374,6 +391,97 @@ def restart_state(state: PDHGState, x_new, y_new) -> PDHGState:
     return state._replace(x=x_new, x_prev=x_new, x_bar=x_new, y=y_new)
 
 
+def adaptive_omega_init(tau0, sigma0, b, c, T, Sigma,
+                        xsum=jnp.sum, ysum=jnp.sum):
+    """Data-driven primal-weight initialization (the PDLP heuristic in
+    the preconditioned metric): scale the primal weight
+    ``omega = sqrt(sigma/tau)`` by ``sqrt(|T^1/2 c| / |Sigma^1/2 b|)``,
+    the expected dual/primal movement ratio of the very first iterations
+    (the dual residual is driven by ``Sigma^1/2 b``, the primal one by
+    ``T^1/2 c``).  On scale-imbalanced instances — objective and rhs in
+    mismatched units, which Ruiz equilibration of K cannot see — this
+    alone recovers most of the adaptive win.  Composes with the user's
+    ``opts.omega`` (multiplies it).  ``xsum``/``ysum`` reduce
+    primal/dual vectors (the distributed path passes psum wrappers, so
+    every shard derives the same global weight)."""
+    dt = b.dtype
+    tiny = jnp.asarray(_ADAPT_TINY, dt)
+    nc2 = xsum(T * c * c)
+    nb2 = ysum(Sigma * b * b)
+    w = (jnp.maximum(nc2, tiny) / jnp.maximum(nb2, tiny)) ** 0.25
+    w = jnp.clip(w, 1.0 / ADAPT_OMEGA_CLIP, ADAPT_OMEGA_CLIP)
+    ok = jnp.logical_and(nc2 > tiny, nb2 > tiny)
+    w = jnp.where(jnp.logical_and(ok, jnp.isfinite(w)), w, 1.0)
+    return tau0 / w, sigma0 * w
+
+
+def adaptive_shrink(tau, sigma, eta, dx, dy, Kdx, KTdy, T, Sigma, ok,
+                    xsum=jnp.sum, ysum=jnp.sum):
+    """Down-only local step-scale safeguard for ``step_rule="adaptive"``
+    (Malitsky–Pock-flavored, backtracking free), applied at every check
+    boundary with zero extra MVMs (``Kdx``/``KTdy`` come from the check
+    MVMs by linearity: ``K dx = K x_new - K x_old``).
+
+    The Rayleigh quotient along the window's movement,
+    ``rho_loc^2 = (|S^1/2 K dx|^2 + |T^1/2 K^T dy|^2)
+                  / (|T^-1/2 dx|^2 + |S^-1/2 dy|^2)``,
+    is a LOWER bound on the true preconditioned operator norm — so
+    whenever ``sqrt(tau*sigma) * rho_loc > eta`` the Lemma 2 coupling is
+    provably violated (the Lanczos/power estimate was too small, e.g.
+    few iterations or heavy read noise) and the scale is shrunk to
+    ``eta / rho_loc``.  The product is NEVER grown: for the bilinear
+    saddle dynamics ``tau*sigma*rho^2 <= 1`` is necessary, not just
+    sufficient — any sustained overshoot diverges along the top singular
+    pair, so there is no safe upside, only this downside protection.
+    Identity when the estimate was sound.  Gated by ``ok`` (a valid
+    previous boundary exists) and finiteness.
+    """
+    dt = dx.dtype
+    tiny = jnp.asarray(_ADAPT_TINY, dt)
+    ndx2 = xsum(dx * dx / T)
+    ndy2 = ysum(dy * dy / Sigma)
+    nK2 = ysum(Sigma * Kdx * Kdx) + xsum(T * KTdy * KTdy)
+    mv2 = ndx2 + ndy2
+    rho_loc = jnp.sqrt(nK2 / jnp.maximum(mv2, tiny))
+    g = jnp.sqrt(tau * sigma)
+    s = jnp.minimum(jnp.asarray(1.0, dt),
+                    jnp.asarray(eta, dt) / jnp.maximum(rho_loc * g, tiny))
+    ok = jnp.logical_and(ok, jnp.logical_and(mv2 > tiny, jnp.isfinite(s)))
+    s = jnp.where(ok, s, 1.0)
+    return tau * s, sigma * s
+
+
+def adaptive_omega_update(tau, sigma, dx, dy, T, Sigma, w_lo, w_hi, ok,
+                          xsum=jnp.sum, ysum=jnp.sum):
+    """PDLP primal-weight rebalancing, applied at RESTART events only
+    (restarts land on check boundaries, so the fused window stays one
+    launch).  ``dx``/``dy`` are the movement since the previous restart
+    anchor; the weight ``omega = sqrt(sigma/tau)`` is pulled toward the
+    dual/primal movement ratio ``|dy|_S^-1/2 / |dx|_T^-1/2`` with
+    PDLP's log-space smoothing (``ADAPT_SMOOTH``) and clipped to
+    ``[w_lo, w_hi]`` (a trust region around the initial weight).
+    Restart cadence matters: at raw window cadence the ratio chases its
+    own effect (a bigger sigma moves the dual more, which asks for a
+    bigger sigma — positive feedback); between restarts the movement
+    reflects genuine progress scale.  The product tau*sigma (the Lemma 2
+    budget) is preserved exactly."""
+    dt = dx.dtype
+    tiny = jnp.asarray(_ADAPT_TINY, dt)
+    ndx2 = xsum(dx * dx / T)
+    ndy2 = ysum(dy * dy / Sigma)
+    ok = jnp.logical_and(ok, jnp.logical_and(ndx2 > tiny, ndy2 > tiny))
+    w_old = jnp.sqrt(sigma / tau)
+    ratio = jnp.sqrt(ndy2 / jnp.maximum(ndx2, tiny))
+    w_new = jnp.exp(ADAPT_SMOOTH * jnp.log(jnp.maximum(ratio, tiny))
+                    + (1.0 - ADAPT_SMOOTH) * jnp.log(
+                        jnp.maximum(w_old, tiny)))
+    w_new = jnp.clip(w_new, w_lo, w_hi)
+    g = jnp.sqrt(tau * sigma)
+    ok = jnp.logical_and(ok, jnp.isfinite(w_new))
+    return (jnp.where(ok, g / w_new, tau),
+            jnp.where(ok, g * w_new, sigma))
+
+
 # ----------------------------------------------------------------- loop ---
 
 def draw_init(key, m: int, n: int, lb, ub, dtype):
@@ -389,6 +497,9 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
               x0, y0, tau0, sigma0, key, *,
               max_iters: int, tol: float, gamma: float, check_every: int,
               restart_beta: float, restart: bool = True,
+              step_rule: str = "fixed", eta: float = 0.95,
+              xsum_fn: Optional[Callable] = None,
+              ysum_fn: Optional[Callable] = None,
               residual_fn: Optional[Callable] = None):
     """The jitted solve loop every non-host path runs: ``check_every``
     fused iterations per ``lax.while_loop`` body, then one residual check
@@ -412,16 +523,53 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
     launches; the check itself stays out here, so fused and unfused
     loops visit the same check points on the same iterates.
 
+    ``step_rule`` is a STATIC Python string (one of ``STEP_RULES``):
+
+      * ``"fixed"`` (default) and ``"strongly_convex"`` trace the exact
+        loop this function has always traced — ``"strongly_convex"`` is
+        just the explicit, validated opt-in for ``gamma > 0``'s
+        accelerated ``theta_k`` schedule (the theta math lives in
+        ``pdhg_step`` and is carried in tau/sigma either way; with
+        ``gamma == 0`` every theta is exactly 1.0 and "fixed" is
+        bitwise-identical to the historical behavior).
+      * ``"adaptive"`` = PDLP-style primal-weight adaptation on top of
+        the same loop: (a) ``adaptive_omega_init`` rescales
+        (tau0, sigma0) from the problem data before the first iterate;
+        (b) ``adaptive_omega_update`` rebalances the primal weight at
+        RESTART events from the movement since the previous restart
+        anchor (carried in the loop state); (c) ``adaptive_shrink``
+        applies a down-only step-scale safeguard at every boundary from
+        the window's Rayleigh quotient (reusing the check MVMs by
+        linearity — zero extra MVMs).  tau/sigma move ONLY at check
+        boundaries, so the fused megakernel window is untouched and
+        stays one launch.  ``eta`` is the Lemma 2 safety factor the
+        safeguard enforces; ``xsum_fn``/``ysum_fn`` let the distributed
+        path psum every rebalance reduction.  With ``restart=False``
+        only (a) and (c) are active.
+
     ``residual_fn(x, x_prev, y, Kx, KTy) -> scalar merit`` defaults to
     the dense KKT residual max; the distributed path passes its
     psum-reduced variant.  Returns ``(x, y, iterations, merit)``.
     """
+    if step_rule not in STEP_RULES:
+        raise ValueError(f"unknown step_rule {step_rule!r}; expected one "
+                         f"of {STEP_RULES}")
+    adaptive = step_rule == "adaptive"
+    xsum = jnp.sum if xsum_fn is None else xsum_fn
+    ysum = jnp.sum if ysum_fn is None else ysum_fn
     if residual_fn is None:
         def residual_fn(x, x_prev, y, Kx, KTy):
             return kkt_residuals(x, x_prev, y, c, b, Kx, KTy,
                                  lb=lb, ub=ub).max
 
     dt = x0.dtype
+    if adaptive:
+        tau0, sigma0 = adaptive_omega_init(
+            jnp.asarray(tau0, dt), jnp.asarray(sigma0, dt),
+            b, c, T, Sigma, xsum, ysum)
+        w0 = jnp.sqrt(sigma0 / tau0)
+        w_lo = w0 / jnp.asarray(ADAPT_OMEGA_CLIP, dt)
+        w_hi = w0 * jnp.asarray(ADAPT_OMEGA_CLIP, dt)
     state0 = init_state(x0, y0, tau0, sigma0, gamma)
 
     def half_iter(_, carry):
@@ -432,7 +580,11 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
         return (state, xs + state.x, ys + state.y, cnt + 1.0, rk)
 
     def body(loop):
-        state, it, merit, xs, ys, cnt, m_restart, rk = loop
+        if adaptive:
+            (state, it, merit, xs, ys, cnt, m_restart, rk,
+             ax, ay, aKx, aKTy, aok, rx, ry) = loop
+        else:
+            state, it, merit, xs, ys, cnt, m_restart, rk = loop
         if op.fuse is not None:
             # megakernel window: one fused launch, no per-step keys
             # (fused backends are noiseless, so none are consumed)
@@ -443,14 +595,17 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
             state, xs, ys, cnt, rk = jax.lax.fori_loop(
                 0, check_every, half_iter, (state, xs, ys, cnt, rk))
         rk, k3, k4 = jax.random.split(rk, 3)
-        merit = residual_fn(state.x, state.x_prev, state.y,
-                            op.fwd(state.x, k3), op.adj(state.y, k4))
+        Kx = op.fwd(state.x, k3)
+        KTy = op.adj(state.y, k4)
+        merit = residual_fn(state.x, state.x_prev, state.y, Kx, KTy)
+        Kx_c, KTy_c = Kx, KTy
         if restart:
             x_avg = xs / jnp.maximum(cnt, 1.0)
             y_avg = ys / jnp.maximum(cnt, 1.0)
             rk, k5, k6 = jax.random.split(rk, 3)
-            merit_avg = residual_fn(x_avg, x_avg, y_avg,
-                                    op.fwd(x_avg, k5), op.adj(y_avg, k6))
+            Kxa = op.fwd(x_avg, k5)
+            KTya = op.adj(y_avg, k6)
+            merit_avg = residual_fn(x_avg, x_avg, y_avg, Kxa, KTya)
             do_restart = merit_avg < restart_beta * m_restart
             use_avg = jnp.logical_or(
                 jnp.logical_and(do_restart, merit_avg < merit),
@@ -471,6 +626,25 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
             # current iterate, so exits reported a residual the returned
             # solution does not satisfy.
             merit = jnp.where(use_avg, merit_avg, merit)
+            if adaptive:
+                # operator images of the iterate actually carried — by
+                # linearity, no extra MVMs beyond the check's
+                Kx_c, KTy_c = pick(Kxa, Kx), pick(KTya, KTy)
+                tau_n, sigma_n = adaptive_omega_update(
+                    state.tau, state.sigma, state.x - rx, state.y - ry,
+                    T, Sigma, w_lo, w_hi, do_restart, xsum, ysum)
+                state = state._replace(tau=tau_n, sigma=sigma_n)
+                rx = jnp.where(do_restart, state.x, rx)
+                ry = jnp.where(do_restart, state.y, ry)
+        if adaptive:
+            tau_n, sigma_n = adaptive_shrink(
+                state.tau, state.sigma, eta,
+                state.x - ax, state.y - ay, Kx_c - aKx, KTy_c - aKTy,
+                T, Sigma, aok, xsum, ysum)
+            state = state._replace(tau=tau_n, sigma=sigma_n)
+            return (state, it + check_every, merit, xs, ys, cnt,
+                    m_restart, rk, state.x, state.y, Kx_c, KTy_c,
+                    jnp.asarray(True), rx, ry)
         return (state, it + check_every, merit, xs, ys, cnt, m_restart, rk)
 
     def cond(loop):
@@ -480,6 +654,12 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
     init = (state0, jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dt),
             jnp.zeros_like(x0), jnp.zeros_like(y0), jnp.asarray(0.0, dt),
             jnp.asarray(jnp.inf, dt), key)
+    if adaptive:
+        # window baselines for the first boundary are placeholders
+        # (aok=False masks them until a boundary has been recorded);
+        # the restart anchors (rx, ry) start at the true initial iterate.
+        init = init + (x0, y0, jnp.zeros_like(y0), jnp.zeros_like(x0),
+                       jnp.asarray(False), x0, y0)
     state, it, merit = jax.lax.while_loop(cond, body, init)[:3]
     return state.x, state.y, it, merit
 
@@ -510,7 +690,9 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     gate, default True), ``sparse_kernel`` (executable-cache
     discriminator for the sparse backend — the stacking layer picks the
     operator), ``megakernel`` (fuse each check window into one launch;
-    auto-mounted on the dense backend at ``sigma_read == 0``).
+    auto-mounted on the dense backend at ``sigma_read == 0``),
+    ``step_rule`` (one of ``STEP_RULES``, default ``"fixed"`` — see
+    ``pdhg_loop``).
     """
     (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
      sigma_read, kernel) = static[:9]
@@ -518,6 +700,7 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     # trace time, so these bool() calls never touch the device
     restart = bool(static[9]) if len(static) > 9 else True  # jaxlint: disable=R5
     megakernel = bool(static[11]) if len(static) > 11 else False  # jaxlint: disable=R5
+    step_rule = str(static[12]) if len(static) > 12 else "fixed"  # jaxlint: disable=R5
     m, n = b.shape[0], c.shape[0]
     # an all-zero operator (degenerate but legal: the optimum is just the
     # box projection of -c's direction) has rho = 0; unguarded it makes
@@ -540,6 +723,7 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
         b, c, lb, ub, T, Sigma, x0, y0, tau0, sigma0, key,
         max_iters=max_iters, tol=tol, gamma=gamma, check_every=check_every,
         restart_beta=restart_beta, restart=restart,
+        step_rule=step_rule, eta=eta,
     )
 
 
@@ -556,9 +740,17 @@ def lemma2_margin(rho, sigma_read: float):
 def mvm_accounting(iterations: int, check_every: int,
                    lanczos_iters: int, restart: bool = True) -> int:
     """Device-MVM total for the energy ledger, shared by every jitted
-    path: Lanczos (1 MVM/iter; 0 under ``norm_override``) + PDHG (2/iter)
-    + residual checks (4 per check: x/y pair for the current AND the
-    averaged iterate; with restarts gated off the averaged pair is never
-    evaluated, so checks charge 2)."""
+    path: norm estimation (1 MVM per Lanczos/power iteration; 0 under
+    ``norm_override``) + PDHG (2/iter) + residual checks (4 per check:
+    x/y pair for the current AND the averaged iterate; with restarts
+    gated off the averaged pair is never evaluated, so checks charge 2).
+
+    ``iterations`` on EVERY jitted path — stepped fori_loop and fused
+    megakernel alike — advances by ``check_every`` per while_loop body,
+    so reported iteration counts (and therefore this charge) quantize to
+    ``check_every`` multiples: convergence mid-window is only observed
+    at the next boundary, and the work (and energy) for the full window
+    was genuinely spent.  Megakernel and stepped paths agree exactly —
+    a test pins this (``tests/test_step_rules.py``)."""
     n_checks = max(1, iterations // max(1, check_every))
     return lanczos_iters + 2 * iterations + (4 if restart else 2) * n_checks

@@ -24,6 +24,11 @@ import numpy as np
 
 from .symblock import MODE_FULL, Accel, matmul_accel
 
+# norm estimators selectable by ``PDHGOptions.norm_backend`` on the
+# jitted prep paths; both cost ONE symmetric-block MVM per iteration, so
+# the energy ledger charges them identically
+NORM_BACKENDS = ("lanczos", "power")
+
 
 @dataclasses.dataclass
 class LanczosResult:
@@ -152,6 +157,36 @@ def lanczos_svd_jit(M: jnp.ndarray, k_max: int = 32, key=None) -> jnp.ndarray:
     """
     return lanczos_svd_jit_mv(lambda v: M @ v, M.shape[0], M.dtype,
                               k_max=k_max, key=key)
+
+
+def power_iteration_mv(matvec, dim: int, dtype, iters: int = 64,
+                       key=None, v0=None) -> jnp.ndarray:
+    """Jitted fixed-iteration power method on an arbitrary symmetric
+    matvec — the ``norm_backend="power"`` twin of ``lanczos_svd_jit_mv``
+    (same call shape, same one-MVM-per-iteration ledger charge).
+
+    On the symmetric block M of K the spectrum comes in +/-sigma pairs
+    (Proposition 1), so the iterate itself may oscillate between the two
+    dominant eigenvector signs — but the Rayleigh growth factor
+    ``||M v_k||`` still converges to sigma_max(K), which is what is
+    returned.  ``v0`` optionally overrides the start vector; by default a
+    fresh reproducible draw is used (the norm-reuse refinement path keeps
+    the default — only the scalar estimate is cached, not the direction).
+    """
+    if key is None:
+        # deliberate: reproducible default start vector (see lanczos_svd)
+        key = jax.random.PRNGKey(0)  # jaxlint: disable=R2
+    if v0 is None:
+        v0 = jax.random.normal(key, (dim,), dtype=dtype)
+    v0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-30)
+
+    def body(v, _):
+        w = matvec(v)
+        nw = jnp.linalg.norm(w)
+        return w / jnp.maximum(nw, 1e-30), nw
+
+    _, norms = jax.lax.scan(body, v0, None, length=iters)
+    return norms[-1]
 
 
 def power_iteration(

@@ -34,7 +34,12 @@ import numpy as np
 from ..lp.problem import StandardLP
 from . import engine
 from . import precondition as precond_mod
-from .lanczos import lanczos_svd, lanczos_svd_jit
+from .lanczos import (
+    NORM_BACKENDS,
+    lanczos_svd,
+    lanczos_svd_jit,
+    power_iteration_mv,
+)
 from .noise import NOISELESS, NoiseModel
 from .residuals import KKTResiduals, kkt_residuals
 from .symblock import (
@@ -71,6 +76,22 @@ class PDHGOptions:
     #                                scatter; the memory-optimal path)
     megakernel: bool = False       # fuse each check_every window into ONE
     #                                kernel launch (noiseless paths only)
+    step_rule: str = "fixed"       # step-size schedule: "fixed" (constant
+    #                                tau/sigma; requires gamma == 0) |
+    #                                "adaptive" (data-driven primal-weight
+    #                                init, PDLP-style rebalancing at
+    #                                restart events, and a down-only
+    #                                Malitsky-Pock-flavored step-scale
+    #                                safeguard — all at check boundaries
+    #                                only, so fused windows stay one
+    #                                launch; requires gamma == 0) |
+    #                                "strongly_convex" (the accelerated
+    #                                theta_k = 1/sqrt(1+2*gamma*tau)
+    #                                schedule; requires gamma > 0)
+    norm_backend: str = "lanczos"  # operator-norm estimator on the jitted
+    #                                prep paths: "lanczos" (Algorithm 3) |
+    #                                "power" (symmetric-block power
+    #                                iteration; same MVM count/charge)
 
 
 @dataclasses.dataclass
@@ -132,6 +153,7 @@ def solve(
     ``noise`` only applies to the default backends; a crossbar backend
     brings its own device physics.
     """
+    opts_static(opts)    # shared option validation (step_rule/kernel/...)
     scaled, T, Sigma = prepare(lp, opts)
     m, n = scaled.K.shape
     key = jax.random.PRNGKey(opts.seed)
@@ -166,6 +188,18 @@ def solve(
 
     tau = opts.eta / (opts.omega * rho)
     sigma = opts.eta * opts.omega / rho
+    adaptive = opts.step_rule == "adaptive"
+    w_lo = w_hi = None
+    adapt_prev = None               # previous boundary (x, y, Kx, KTy)
+    if adaptive:
+        # data-driven primal-weight init + trust region (engine math)
+        tau, sigma = engine.adaptive_omega_init(
+            jnp.asarray(tau, scaled.K.dtype),
+            jnp.asarray(sigma, scaled.K.dtype),
+            scaled.b, scaled.c, T, Sigma)
+        w0 = jnp.sqrt(sigma / tau)
+        w_lo = w0 / engine.ADAPT_OMEGA_CLIP
+        w_hi = w0 * engine.ADAPT_OMEGA_CLIP
 
     # ---- Step 2: initialization (paper: projected Gaussian start).
     key, kx, ky = jax.random.split(key, 3)
@@ -189,6 +223,7 @@ def solve(
     op = engine.accel_operator(accel)
     upd = engine.make_updates(opts.kernel)
     state = engine.init_state(x, y, tau, sigma, opts.gamma)
+    adapt_anchor = (state.x, state.y)   # restart anchor for omega updates
     del x, y, tau, sigma
 
     for it in range(opts.max_iters):
@@ -235,6 +270,7 @@ def solve(
             if opts.infeasibility_detection and merit > 1e8:
                 status = "diverged"
                 break
+            Kx_b, KTy_b = Kx, KTy_c   # images of the iterate carried on
             if opts.restart and avg_len > 0:
                 # fresh keys: reusing k3/k4 here would correlate the read
                 # noise between the current- and averaged-iterate checks
@@ -255,11 +291,34 @@ def solve(
                     # restart from the (better) averaged iterate
                     if merit_avg < merit:
                         state = engine.restart_state(state, x_avg, y_avg)
+                        Kx_b, KTy_b = Kxa, KTya
                     merit_at_restart = min(merit_avg, merit)
                     x_sum = jnp.zeros_like(state.x)
                     y_sum = jnp.zeros_like(state.y)
                     avg_len = 0
                     n_restarts += 1
+                    if adaptive:
+                        # primal-weight rebalance rides restart events
+                        rx, ry = adapt_anchor
+                        tau_n, sigma_n = engine.adaptive_omega_update(
+                            state.tau, state.sigma,
+                            state.x - rx, state.y - ry, T, Sigma,
+                            w_lo, w_hi, jnp.asarray(True))
+                        state = state._replace(tau=tau_n, sigma=sigma_n)
+                        adapt_anchor = (state.x, state.y)
+            if adaptive:
+                # boundary-only down-only scale safeguard; the math lives
+                # in the engine, and K(dx)/K^T(dy) come from the check
+                # MVMs by linearity
+                if adapt_prev is not None:
+                    px, py, pKx, pKTy = adapt_prev
+                    tau_n, sigma_n = engine.adaptive_shrink(
+                        state.tau, state.sigma, opts.eta,
+                        state.x - px, state.y - py,
+                        Kx_b - pKx, KTy_b - pKTy,
+                        T, Sigma, jnp.asarray(True))
+                    state = state._replace(tau=tau_n, sigma=sigma_n)
+                adapt_prev = (state.x, state.y, Kx_b, KTy_b)
 
     x_orig = np.asarray(scaled.unscale_x(state.x))
     y_orig = np.asarray(scaled.unscale_y(state.y))
@@ -306,15 +365,17 @@ def solve(
 # cache key (``tools.jaxlint`` rule R1 cross-checks this allowlist against
 # the dataclass fields and the ``opts_static`` tuple below — adding an
 # option without deciding its cache-key fate is a lint error).
-# ``ruiz_iters``/``lanczos_iters``/``norm_override`` ride in
-# ``runtime.batch``'s separate prep-signature tuple; ``lanczos_tol``/
+# ``ruiz_iters``/``lanczos_iters``/``norm_override``/``norm_backend``
+# ride in ``runtime.batch``'s separate prep-signature tuple (the norm
+# estimate is a prep-stage input to the solve executable, not part of
+# its trace); ``lanczos_tol``/
 # ``use_diag_precond``/``infeasibility_detection`` only steer the host
 # solve path; ``seed``/``track_history`` are runtime data; ``dtype`` is
 # already encoded by every traced array shape.
 DYNAMIC_FIELDS = (
     "ruiz_iters", "use_diag_precond", "lanczos_iters", "lanczos_tol",
     "infeasibility_detection", "seed", "dtype", "track_history",
-    "norm_override",
+    "norm_override", "norm_backend",
 )
 
 
@@ -326,9 +387,12 @@ def opts_static(opts: PDHGOptions, sigma_read: float = 0.0) -> tuple:
     deliberately stay out of the tuple are declared in
     ``DYNAMIC_FIELDS`` and the pairing is machine-checked by jaxlint
     rule R1).  ``opts.kernel``,
-    ``opts.restart``, ``opts.sparse_kernel`` and ``opts.megakernel`` are
+    ``opts.restart``, ``opts.sparse_kernel``, ``opts.megakernel`` and
+    ``opts.step_rule`` are
     part of the tuple, so compiled-executable caches keyed on it never
-    serve one backend's executable to another.  ``opts.restart`` rides
+    serve one backend's executable to another (a step-rule change is a
+    different trace and must never reuse an executable compiled for
+    another rule).  ``opts.restart`` rides
     as an explicit static boolean — the old encoding (restart off ==
     ``restart_beta 0.0``) only worked because ``0.0 * inf`` is NaN and
     NaN comparisons are false inside the jitted body."""
@@ -342,10 +406,21 @@ def opts_static(opts: PDHGOptions, sigma_read: float = 0.0) -> tuple:
         raise ValueError("megakernel mode is noiseless-only: per-MVM "
                          "read-noise keys cannot be split inside a fused "
                          "launch (sigma_read must be 0)")
+    if opts.step_rule not in engine.STEP_RULES:
+        raise ValueError(f"unknown step_rule {opts.step_rule!r}; expected "
+                         f"one of {engine.STEP_RULES}")
+    if opts.step_rule == "strongly_convex" and not opts.gamma > 0.0:
+        raise ValueError("step_rule='strongly_convex' is the accelerated "
+                         "theta_k schedule and requires gamma > 0")
+    if opts.step_rule != "strongly_convex" and opts.gamma != 0.0:
+        raise ValueError(f"gamma > 0 drives the strongly-convex schedule; "
+                         f"set step_rule='strongly_convex' explicitly "
+                         f"(got gamma={opts.gamma} with "
+                         f"step_rule={opts.step_rule!r})")
     return (opts.max_iters, opts.tol, opts.eta, opts.omega, opts.gamma,
             opts.check_every, opts.restart_beta, float(sigma_read),
             opts.kernel, bool(opts.restart), opts.sparse_kernel,
-            bool(opts.megakernel))
+            bool(opts.megakernel), opts.step_rule)
 
 
 # Backwards-compatible alias: the dense jit core now lives in the engine.
@@ -375,11 +450,19 @@ def solve_jit(
     scaled, T, Sigma = prepare(lp, opts)
     Kf = scaled.K if K_fwd is None else jnp.asarray(K_fwd, scaled.K.dtype)
     Ka = Kf.T if K_adj is None else jnp.asarray(K_adj, scaled.K.dtype)
+    if opts.norm_backend not in NORM_BACKENDS:
+        raise ValueError(f"unknown norm_backend {opts.norm_backend!r}; "
+                         f"expected one of {NORM_BACKENDS}")
     if opts.norm_override is not None:
         rho = jnp.asarray(opts.norm_override, scaled.K.dtype)
     else:
         Keff = jnp.sqrt(Sigma)[:, None] * Kf * jnp.sqrt(T)[None, :]
-        rho = lanczos_svd_jit(build_sym_block(Keff), k_max=opts.lanczos_iters)
+        M = build_sym_block(Keff)
+        if opts.norm_backend == "power":
+            rho = power_iteration_mv(lambda v: M @ v, M.shape[0], M.dtype,
+                                     iters=opts.lanczos_iters)
+        else:
+            rho = lanczos_svd_jit(M, k_max=opts.lanczos_iters)
         rho = engine.lemma2_margin(rho, sigma_read)
     static = opts_static(opts, sigma_read)
     core = jax.jit(engine.solve_core, static_argnums=(10,))

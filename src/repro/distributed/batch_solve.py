@@ -46,7 +46,7 @@ def solve_batch(
     B = args[0].shape[0]
     keys = jax.device_put(
         jax.random.split(jax.random.PRNGKey(opts.seed), B), batch_sharding)
-    xs, ys, its, merits = jax.jit(pipeline)(*args, keys)
+    xs, ys, its, merits, _rhos = jax.jit(pipeline)(*args, keys)
     return {
         "x": np.asarray(xs),
         "y": np.asarray(ys),

@@ -176,11 +176,20 @@ def solve_dist(
     if opts.norm_override is not None:
         rho = float(opts.norm_override)
     else:
-        from ..core.lanczos import lanczos_svd_jit
+        from ..core.lanczos import (
+            NORM_BACKENDS, lanczos_svd_jit, power_iteration_mv)
         from ..core.symblock import build_sym_block
+        if opts.norm_backend not in NORM_BACKENDS:
+            raise ValueError(f"unknown norm_backend {opts.norm_backend!r}; "
+                             f"expected one of {NORM_BACKENDS}")
         Keff = jnp.sqrt(Sigma)[:, None] * scaled.K * jnp.sqrt(T)[None, :]
-        rho = float(lanczos_svd_jit(build_sym_block(Keff),
-                                    k_max=opts.lanczos_iters))
+        M = build_sym_block(Keff)
+        if opts.norm_backend == "power":
+            rho = float(power_iteration_mv(lambda v: M @ v, M.shape[0],
+                                           M.dtype,
+                                           iters=opts.lanczos_iters))
+        else:
+            rho = float(lanczos_svd_jit(M, k_max=opts.lanczos_iters))
         if tile_dtype is not None:
             rho = rho / (1.0 - 0.05)   # Lemma-2 margin for tile rounding
     prob = shard_problem(scaled, T, Sigma, mesh, tile_dtype=tile_dtype)
@@ -209,6 +218,13 @@ def solve_dist(
             return _dist_kkt_max(x, x_prev, y, c, b, Kx, KTy, lb, ub,
                                  Rax, Cax)
 
+        # the adaptive rebalance reduces x-like vectors over the column
+        # axis and y-like over the rows, exactly like the merit's norms;
+        # padded coordinates are pinned (dx = dy = 0) so they never bias
+        # the movement ratios
+        xsum_fn = lambda v: jax.lax.psum(jnp.sum(v), Cax)   # noqa: E731
+        ysum_fn = lambda v: jax.lax.psum(jnp.sum(v), Rax)   # noqa: E731
+
         return engine.pdhg_loop(
             op, engine.JNP_UPDATES, b, c, lb, ub, T, Sig,
             x0, y0, opts.eta / (opts.omega * rho),
@@ -216,6 +232,8 @@ def solve_dist(
             max_iters=opts.max_iters, tol=opts.tol, gamma=opts.gamma,
             check_every=opts.check_every,
             restart_beta=opts.restart_beta, restart=opts.restart,
+            step_rule=opts.step_rule, eta=opts.eta,
+            xsum_fn=xsum_fn, ysum_fn=ysum_fn,
             residual_fn=residual_fn,
         )
 

@@ -19,8 +19,19 @@ no noise is configured.  Two operand layouts share one step loop:
     ell   — forward + adjoint ELL (data, cols) pairs, row gathers
 
 Vectors travel as (d, 1) columns and scalars as (1, 1) blocks, the
-kernel-package convention.  On CPU this runs interpreted (slow,
-validation only); the win is compiled Mosaic on a real accelerator.
+kernel-package convention.  tau/sigma enter as (1, 1) runtime operands
+and are RETURNED with the state: the ``strongly_convex`` θ-schedule
+updates them inside the window (the in-kernel ``fori_loop`` replays the
+same recurrence as ``pdhg_step``), while ``step_rule="adaptive"``
+changes them only BETWEEN windows (at check boundaries, in the engine) —
+either way the window stays one launch and nothing retraces.
+
+Because the loop advances ``check_every`` half-iterations per launch,
+``PDHGResult.iterations`` from any fused or stepped jit path is
+quantized to multiples of ``check_every`` — exits are only observed at
+check boundaries (see ``engine.mvm_accounting``).  On CPU this runs
+interpreted (slow, validation only); the win is compiled Mosaic on a
+real accelerator.
 """
 from __future__ import annotations
 

@@ -12,7 +12,11 @@ primal:  x_new = clip(x − τ·T⊙(c − KTy), lb, ub)
          x_bar = x_new + θ·(x_new − x)           (extrapolation for k+1)
 dual:    y_new = y + σ·Σ⊙(b − Kxbar)
 
-Scalars (τ, θ, σ) ride in as (1,1) blocks pinned to block (0,0).
+Scalars (τ, θ, σ) ride in as (1,1) blocks pinned to block (0,0) — they
+are runtime OPERANDS, not compile-time constants, so the carried
+``PDHGState.tau``/``sigma`` may change between iterations (the
+``strongly_convex`` θ-schedule every step, ``adaptive`` rebalancing at
+check boundaries) without retracing or recompiling these kernels.
 """
 from __future__ import annotations
 

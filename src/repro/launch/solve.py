@@ -102,6 +102,29 @@ def main(argv=None):
                          "mode auto-detected; on the crossbar batch path "
                          "'pallas' also routes every MVM through the "
                          "differential-pair crossbar kernel)")
+    from ..core.engine import STEP_RULES
+    from ..core.lanczos import NORM_BACKENDS
+
+    ap.add_argument("--step-rule", default="fixed", choices=STEP_RULES,
+                    help="'fixed' = classic constant steps; 'adaptive' = "
+                         "data-driven primal-weight init + PDLP-style "
+                         "rebalancing at restarts + down-only step "
+                         "safeguard (boundary-only, megakernel-safe); "
+                         "'strongly_convex' = accelerated theta schedule "
+                         "(requires --gamma > 0)")
+    ap.add_argument("--gamma", type=float, default=0.0,
+                    help="strong-convexity modulus for "
+                         "--step-rule strongly_convex")
+    ap.add_argument("--norm-backend", default="lanczos",
+                    choices=NORM_BACKENDS,
+                    help="jitted operator-norm estimator seeding the "
+                         "step sizes")
+    ap.add_argument("--norm-reuse", action="store_true",
+                    help="with --backend batch: reuse operator-norm "
+                         "estimates across stream passes, keyed by "
+                         "(shape bucket, sparsity fingerprint) — repeat "
+                         "instances pay a short power-iteration refine "
+                         "instead of the full Lanczos run")
     ap.add_argument("--tol", type=float, default=1e-6)
     ap.add_argument("--max-iters", type=int, default=40000)
     ap.add_argument("--seed", type=int, default=0)
@@ -133,7 +156,14 @@ def main(argv=None):
     jax.config.update("jax_enable_x64", True)
     opts = PDHGOptions(max_iters=args.max_iters, tol=args.tol,
                        check_every=100, seed=args.seed,
-                       kernel=args.kernel)
+                       kernel=args.kernel, step_rule=args.step_rule,
+                       gamma=args.gamma, norm_backend=args.norm_backend)
+    if args.norm_reuse and (args.backend != "batch"
+                            or args.device != "none"):
+        ap.error("--norm-reuse only applies to --backend batch without "
+                 "--device (single solves estimate the norm once by "
+                 "construction; the crossbar stream programs every cell "
+                 "per instance, so there is nothing to reuse)")
     if args.backend == "batch":
         specs = (args.instances or args.instance).split(",")
         lps = [load_instance(s.strip(), seed=args.seed + i)
@@ -162,9 +192,11 @@ def main(argv=None):
         if n_pods > 1 or info.is_multiprocess:
             from ..runtime import ClusterBatchSolver
             solver = ClusterBatchSolver(opts, async_dispatch=not args.sync,
-                                        n_pods=n_pods)
+                                        n_pods=n_pods,
+                                        norm_reuse=args.norm_reuse)
         else:
-            solver = BatchSolver(opts, async_dispatch=not args.sync)
+            solver = BatchSolver(opts, async_dispatch=not args.sync,
+                                 norm_reuse=args.norm_reuse)
         results = solver.solve_stream(lps)
         for lp, r in zip(lps, results):
             line = (f"instance={r.name} shape={lp.K.shape} "

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import time
 from typing import List, Optional, Sequence, Tuple
 
@@ -62,7 +63,11 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..core import engine
-from ..core.lanczos import lanczos_svd_jit_mv
+from ..core.lanczos import (
+    NORM_BACKENDS,
+    lanczos_svd_jit_mv,
+    power_iteration_mv,
+)
 from ..core.pdhg import PDHGOptions
 from ..core.pdhg import opts_static  # noqa: F401  (canonical home; re-export)
 from ..kernels.sparse_mvm import (
@@ -79,6 +84,11 @@ MIN_NNZ_BUCKET = 16
 # donate the stacked operator buffer to the executable past this size
 # (on backends that implement donation; CPU silently ignores it)
 DONATE_MIN_BYTES = 32 << 20
+# norm-reuse serving (``BatchSolver(norm_reuse=True)``): instances whose
+# (shape bucket, sparsity fingerprint) already has a cached operator-norm
+# estimate run this many power-iteration refinement MVMs instead of the
+# full ``opts.lanczos_iters``-step estimate
+NORM_REFINE_ITERS = 8
 
 
 # ------------------------------------------------------------- bucketing ---
@@ -277,8 +287,31 @@ def prep_scale(K, b, c, lb, ub, opts: PDHGOptions):
             scaled.D1, scaled.D2)
 
 
-def _prep_one(K, b, c, lb, ub, opts: PDHGOptions):
-    from ..core.lanczos import lanczos_svd_jit
+def _check_norm_backend(opts: PDHGOptions) -> None:
+    if opts.norm_backend not in NORM_BACKENDS:
+        raise ValueError(f"unknown norm_backend {opts.norm_backend!r}; "
+                         f"expected one of {NORM_BACKENDS}")
+
+
+def _estimate_norm_mv(mv, dim: int, dtype, opts: PDHGOptions,
+                      rho_seed=None):
+    """RAW operator-norm estimate (no Lemma-2 margin) on a symmetric
+    matvec, per ``opts.norm_backend``.  With a ``rho_seed`` (the
+    norm-reuse serving path: a cached estimate for this sparsity
+    fingerprint) only a short power refinement runs and the result is
+    floored at the seed — same-pattern instances share spectra, so the
+    cached maximum is already the safe bet and the refinement just
+    catches genuinely hotter coefficient draws."""
+    if rho_seed is not None:
+        est = power_iteration_mv(mv, dim, dtype, iters=NORM_REFINE_ITERS)
+        return jnp.maximum(est, jnp.asarray(rho_seed, est.dtype))
+    if opts.norm_backend == "power":
+        return power_iteration_mv(mv, dim, dtype,
+                                  iters=opts.lanczos_iters)
+    return lanczos_svd_jit_mv(mv, dim, dtype, k_max=opts.lanczos_iters)
+
+
+def _prep_one(K, b, c, lb, ub, rho_seed=None, *, opts: PDHGOptions):
     from ..core.symblock import build_sym_block
 
     (Ks, bs, cs, lbs, ubs, T, Sigma, D1, D2) = prep_scale(
@@ -287,33 +320,51 @@ def _prep_one(K, b, c, lb, ub, opts: PDHGOptions):
         rho = jnp.asarray(opts.norm_override, Ks.dtype)
     else:
         Keff = jnp.sqrt(Sigma)[:, None] * Ks * jnp.sqrt(T)[None, :]
-        rho = lanczos_svd_jit(build_sym_block(Keff),
-                              k_max=opts.lanczos_iters)
+        M = build_sym_block(Keff)
+        rho = _estimate_norm_mv(lambda v: M @ v, M.shape[0], M.dtype,
+                                opts, rho_seed)
     return (Ks, bs, cs, lbs, ubs, T, Sigma, rho, D1, D2)
 
 
-def make_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
+def make_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0,
+                         norm_seeded: bool = False):
     """vmapped prep + solve over a stacked (B, m, n) bucket.
 
     ``keys`` carries one PRNG key per instance (iterate init + read-noise
-    streams).  Returns (xs, ys, iterations, merits) in the ORIGINAL
-    (unscaled) coordinates.  Pure function of the stacked arrays — safe
-    to jit/AOT.
+    streams).  Returns (xs, ys, iterations, merits, rhos) in the ORIGINAL
+    (unscaled) coordinates — ``rhos`` is the per-instance RAW norm
+    estimate (pre-margin), which the norm-reuse cache records.  With
+    ``norm_seeded`` the pipeline takes an extra per-instance
+    ``rho_seeds`` argument and runs the short refinement instead of the
+    full estimate (see ``_estimate_norm_mv``).  Pure function of the
+    stacked arrays — safe to jit/AOT.
     """
     static = opts_static(opts, sigma_read)
+    _check_norm_backend(opts)
 
-    def pipeline(Ks, bs, cs, lbs, ubs, keys):
-        prepped = jax.vmap(functools.partial(_prep_one, opts=opts))(
-            Ks, bs, cs, lbs, ubs)
+    def _run(Ks, bs, cs, lbs, ubs, keys, rho_seeds=None):
+        prep = functools.partial(_prep_one, opts=opts)
+        if rho_seeds is None:
+            prepped = jax.vmap(prep)(Ks, bs, cs, lbs, ubs)
+        else:
+            prepped = jax.vmap(prep)(Ks, bs, cs, lbs, ubs, rho_seeds)
         (Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos, D1s, D2s) = prepped
+        rhos_used = rhos
         if opts.norm_override is None:
-            # only the (noisy) Lanczos estimate gets the Lemma-2 margin;
+            # only the (noisy) estimate gets the Lemma-2 margin;
             # an explicit norm_override is trusted as-is (= solve_jit)
-            rhos = engine.lemma2_margin(rhos, sigma_read)
+            rhos_used = engine.lemma2_margin(rhos, sigma_read)
         solver = functools.partial(_single_solve, static=static)
         xs, ys, its, merits = jax.vmap(solver)(
-            Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos, keys)
-        return D2s * xs, D1s * ys, its, merits
+            Ks2, bs2, cs2, lbs2, ubs2, Ts, Sigs, rhos_used, keys)
+        return D2s * xs, D1s * ys, its, merits, rhos
+
+    if norm_seeded:
+        def pipeline(Ks, bs, cs, lbs, ubs, keys, rho_seeds):
+            return _run(Ks, bs, cs, lbs, ubs, keys, rho_seeds)
+    else:
+        def pipeline(Ks, bs, cs, lbs, ubs, keys):
+            return _run(Ks, bs, cs, lbs, ubs, keys)
 
     return pipeline
 
@@ -361,25 +412,31 @@ def _prep_one_sparse(data, idx, b, c, lb, ub, opts: PDHGOptions):
     return d, bs, cs, lbs, ubs, T, Sigma, D1, D2
 
 
-def make_sparse_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
+def make_sparse_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0,
+                                norm_seeded: bool = False):
     """vmapped sparse prep + solve over a stacked COO bucket.
 
     Inputs are the ``stack_problems_sparse`` layout: (B, nnz) data,
     (B, nnz, 2) indices, plus the dense vectors and per-instance keys.
-    The operator-norm estimate runs a matvec-only Lanczos on the
-    symmetric block of Sigma^{1/2} K T^{1/2} (two COO contractions per
-    iteration); the solve itself mounts ``engine.sparse_operator`` on a
-    BCOO built from the scaled nonzeros.  No dense (m, n) array ever
-    exists on host or device.
+    The operator-norm estimate runs a matvec-only Lanczos (or power
+    iteration, per ``opts.norm_backend``; a short seeded refinement
+    with ``norm_seeded``) on the symmetric block of
+    Sigma^{1/2} K T^{1/2} (two COO contractions per iteration); the
+    solve itself mounts ``engine.sparse_operator`` on a BCOO built from
+    the scaled nonzeros.  No dense (m, n) array ever exists on host or
+    device.  Returns an extra trailing ``rhos`` (raw per-instance norm
+    estimates) like ``make_bucket_pipeline``.
     """
     static = opts_static(opts, sigma_read)
+    _check_norm_backend(opts)
 
-    def one(kd, ki, b, c, lb, ub, key):
+    def one(kd, ki, b, c, lb, ub, key, rho_seed=None):
         m, n = b.shape[0], c.shape[0]
         (d, bs, cs, lbs, ubs, T, Sigma, D1, D2) = _prep_one_sparse(
             kd, ki, b, c, lb, ub, opts)
         if opts.norm_override is not None:
-            rho = jnp.asarray(opts.norm_override, kd.dtype)
+            rho_raw = jnp.asarray(opts.norm_override, kd.dtype)
+            rho = rho_raw
         else:
             row, col = ki[:, 0], ki[:, 1]
             deff = d * jnp.sqrt(Sigma)[row] * jnp.sqrt(T)[col]
@@ -389,17 +446,21 @@ def make_sparse_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
                 bot = _coo_matvec(deff, col, row, v[:m], n)
                 return jnp.concatenate([top, bot])
 
-            rho = engine.lemma2_margin(
-                lanczos_svd_jit_mv(mv, m + n, kd.dtype,
-                                   k_max=opts.lanczos_iters),
-                sigma_read)
+            rho_raw = _estimate_norm_mv(mv, m + n, kd.dtype, opts,
+                                        rho_seed)
+            rho = engine.lemma2_margin(rho_raw, sigma_read)
         K_sp = jsparse.BCOO((d, ki), shape=(m, n))
         x, y, it, merit = engine.solve_core(
             K_sp, None, bs, cs, lbs, ubs, T, Sigma, rho, key, static)
-        return D2 * x, D1 * y, it, merit
+        return D2 * x, D1 * y, it, merit, rho_raw
 
-    def pipeline(Kdata, Kidx, bs, cs, lbs, ubs, keys):
-        return jax.vmap(one)(Kdata, Kidx, bs, cs, lbs, ubs, keys)
+    if norm_seeded:
+        def pipeline(Kdata, Kidx, bs, cs, lbs, ubs, keys, rho_seeds):
+            return jax.vmap(one)(Kdata, Kidx, bs, cs, lbs, ubs, keys,
+                                 rho_seeds)
+    else:
+        def pipeline(Kdata, Kidx, bs, cs, lbs, ubs, keys):
+            return jax.vmap(one)(Kdata, Kidx, bs, cs, lbs, ubs, keys)
 
     return pipeline
 
@@ -448,7 +509,8 @@ def _prep_one_ell(df, cf, da, ca, b, c, lb, ub, opts: PDHGOptions):
     return sf, sa, bs, cs, lbs, ubs, T, Sigma, D1, D2
 
 
-def make_ell_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
+def make_ell_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0,
+                             norm_seeded: bool = False):
     """vmapped ELL prep + solve over a stacked ELL bucket.
 
     Inputs are the ``stack_problems_ell`` layout plus per-instance keys.
@@ -458,16 +520,21 @@ def make_ell_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
     ``kernels.pdhg_megakernel`` launch).  Like the COO pipeline, no
     dense (m, n) array ever exists on host or device — but unlike it,
     no iteration-path op is a scatter, which is what makes sparse win
-    on wall clock and not just memory.
+    on wall clock and not just memory.  Returns an extra trailing
+    ``rhos`` (raw per-instance norm estimates) like
+    ``make_bucket_pipeline``; ``norm_seeded`` swaps the full estimate
+    for the short cached-seed refinement.
     """
     static = opts_static(opts, sigma_read)
+    _check_norm_backend(opts)
 
-    def one(df, cf, da, ca, b, c, lb, ub, key):
+    def one(df, cf, da, ca, b, c, lb, ub, key, rho_seed=None):
         m, n = b.shape[0], c.shape[0]
         (sf, sa, bs, cs, lbs, ubs, T, Sigma, D1, D2) = _prep_one_ell(
             df, cf, da, ca, b, c, lb, ub, opts)
         if opts.norm_override is not None:
-            rho = jnp.asarray(opts.norm_override, df.dtype)
+            rho_raw = jnp.asarray(opts.norm_override, df.dtype)
+            rho = rho_raw
         else:
             rtS, rtT = jnp.sqrt(Sigma), jnp.sqrt(T)
             deff_f = sf * rtS[:, None] * rtT[cf]
@@ -478,10 +545,9 @@ def make_ell_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
                 bot = ell_matvec(deff_a, ca, v[:m])
                 return jnp.concatenate([top, bot])
 
-            rho = engine.lemma2_margin(
-                lanczos_svd_jit_mv(mv, m + n, df.dtype,
-                                   k_max=opts.lanczos_iters),
-                sigma_read)
+            rho_raw = _estimate_norm_mv(mv, m + n, df.dtype, opts,
+                                        rho_seed)
+            rho = engine.lemma2_margin(rho_raw, sigma_read)
         op = engine.sparse_ell_operator(sf, cf, sa, ca, sigma_read)
         if opts.megakernel and sigma_read == 0.0:
             op = op._replace(fuse=engine.make_fused_ell(
@@ -489,10 +555,15 @@ def make_ell_bucket_pipeline(opts: PDHGOptions, sigma_read: float = 0.0):
         x, y, it, merit = engine.solve_core(
             None, None, bs, cs, lbs, ubs, T, Sigma, rho, key, static,
             operator=op)
-        return D2 * x, D1 * y, it, merit
+        return D2 * x, D1 * y, it, merit, rho_raw
 
-    def pipeline(df, cf, da, ca, bs, cs, lbs, ubs, keys):
-        return jax.vmap(one)(df, cf, da, ca, bs, cs, lbs, ubs, keys)
+    if norm_seeded:
+        def pipeline(df, cf, da, ca, bs, cs, lbs, ubs, keys, rho_seeds):
+            return jax.vmap(one)(df, cf, da, ca, bs, cs, lbs, ubs, keys,
+                                 rho_seeds)
+    else:
+        def pipeline(df, cf, da, ca, bs, cs, lbs, ubs, keys):
+            return jax.vmap(one)(df, cf, da, ca, bs, cs, lbs, ubs, keys)
 
     return pipeline
 
@@ -575,6 +646,18 @@ class BatchSolver:
     executable under ``sanitize.no_implicit_transfers()``, so an
     accidental per-call host<->device transfer raises instead of
     silently serializing dispatch.
+
+    ``norm_reuse=True`` turns on the cross-instance operator-norm cache:
+    every served instance's raw norm estimate is recorded under its
+    (shape bucket, sparsity-pattern fingerprint) key, and a bucket whose
+    instances ALL have cached estimates is served by a seeded executable
+    that replaces the full ``lanczos_iters``-step estimate with a
+    ``NORM_REFINE_ITERS``-step power refinement floored at the cached
+    value (``_estimate_norm_mv``).  The seeded twin executable is
+    compiled EAGERLY on the cold pass, so warm streams stay at zero
+    compiles; the cache changes step sizes (a refined estimate instead
+    of the full one), so it is opt-in — the default ``False`` path is
+    bit-identical to not having the feature.
     """
 
     supports_sparse = True
@@ -587,7 +670,8 @@ class BatchSolver:
                  kernel: Optional[str] = None,
                  async_dispatch: bool = True,
                  donate_min_bytes: int = DONATE_MIN_BYTES,
-                 transfer_sanitize: bool = False):
+                 transfer_sanitize: bool = False,
+                 norm_reuse: bool = False):
         if kernel is not None:
             # convenience override; the kernel choice rides in opts and
             # therefore in every executable cache signature
@@ -601,7 +685,10 @@ class BatchSolver:
         self.async_dispatch = bool(async_dispatch)
         self.donate_min_bytes = int(donate_min_bytes)
         self.transfer_sanitize = bool(transfer_sanitize)
+        self.norm_reuse = bool(norm_reuse)
         self._cache = {}
+        self._norm_cache: dict = {}
+        self._seeded_idxs: set = set()
         self.cache_hits = 0
         self.cache_misses = 0
         self.last_stream_stats: dict = {}
@@ -611,14 +698,17 @@ class BatchSolver:
     def _bucket(self, m: int, n: int) -> Tuple[int, int]:
         return bucket_dims(m, n, min_size=self.min_bucket, tile=self.tile)
 
-    def _make_pipeline(self):
-        return make_bucket_pipeline(self.opts, self.sigma_read)
+    def _make_pipeline(self, norm_seeded: bool = False):
+        return make_bucket_pipeline(self.opts, self.sigma_read,
+                                    norm_seeded=norm_seeded)
 
-    def _make_sparse_pipeline(self):
-        return make_sparse_bucket_pipeline(self.opts, self.sigma_read)
+    def _make_sparse_pipeline(self, norm_seeded: bool = False):
+        return make_sparse_bucket_pipeline(self.opts, self.sigma_read,
+                                           norm_seeded=norm_seeded)
 
-    def _make_ell_pipeline(self):
-        return make_ell_bucket_pipeline(self.opts, self.sigma_read)
+    def _make_ell_pipeline(self, norm_seeded: bool = False):
+        return make_ell_bucket_pipeline(self.opts, self.sigma_read,
+                                        norm_seeded=norm_seeded)
 
     def _device_signature(self):
         """Hashable device component of the executable cache key."""
@@ -646,7 +736,7 @@ class BatchSolver:
                 # prep-stage options that shape the pipeline but live
                 # outside the solve-core static tuple
                 (self.opts.ruiz_iters, self.opts.lanczos_iters,
-                 self.opts.norm_override),
+                 self.opts.norm_override, self.opts.norm_backend),
                 self.tile,
                 self._device_signature(),
                 None if self.mesh is None else
@@ -679,30 +769,43 @@ class BatchSolver:
         return jax.random.PRNGKey(0)  # jaxlint: disable=R2
 
     def _executable(self, mb: int, nb: int, B: int, dtype, *,
-                    donate: bool = False):
-        key = self._cache_key(("dense", mb, nb), B, dtype, donate)
+                    donate: bool = False, seeded: bool = False):
+        sig = ("dense", mb, nb) + (("normseed",) if seeded else ())
+        key = self._cache_key(sig, B, dtype, donate)
         k0 = self._key_template()
         args = (self._sds((B, mb, nb), dtype), self._sds((B, mb), dtype),
                 self._sds((B, nb), dtype), self._sds((B, nb), dtype),
                 self._sds((B, nb), dtype), self._sds((B, *k0.shape),
                                                      k0.dtype))
-        return self._compile(key, self._make_pipeline(), args, donate)
+        if seeded:
+            args = args + (self._sds((B,), dtype),)
+        return self._compile(key, self._make_pipeline(norm_seeded=seeded)
+                             if seeded else self._make_pipeline(),
+                             args, donate)
 
     def _executable_sparse(self, mb: int, nb: int, nnz: int, B: int,
-                           dtype, *, donate: bool = False):
-        key = self._cache_key(("sparse", mb, nb, nnz), B, dtype, donate)
+                           dtype, *, donate: bool = False,
+                           seeded: bool = False):
+        sig = ("sparse", mb, nb, nnz) + (("normseed",) if seeded else ())
+        key = self._cache_key(sig, B, dtype, donate)
         k0 = self._key_template()
         args = (self._sds((B, nnz), dtype),
                 self._sds((B, nnz, 2), jnp.int32),
                 self._sds((B, mb), dtype), self._sds((B, nb), dtype),
                 self._sds((B, nb), dtype), self._sds((B, nb), dtype),
                 self._sds((B, *k0.shape), k0.dtype))
-        return self._compile(key, self._make_sparse_pipeline(), args,
-                             donate)
+        if seeded:
+            args = args + (self._sds((B,), dtype),)
+        return self._compile(key,
+                             self._make_sparse_pipeline(norm_seeded=seeded)
+                             if seeded else self._make_sparse_pipeline(),
+                             args, donate)
 
     def _executable_ell(self, mb: int, nb: int, wf: int, wa: int, B: int,
-                        dtype, *, donate: bool = False):
-        key = self._cache_key(("ell", mb, nb, wf, wa), B, dtype, donate)
+                        dtype, *, donate: bool = False,
+                        seeded: bool = False):
+        sig = ("ell", mb, nb, wf, wa) + (("normseed",) if seeded else ())
+        key = self._cache_key(sig, B, dtype, donate)
         k0 = self._key_template()
         args = (self._sds((B, mb, wf), dtype),
                 self._sds((B, mb, wf), jnp.int32),
@@ -711,11 +814,39 @@ class BatchSolver:
                 self._sds((B, mb), dtype), self._sds((B, nb), dtype),
                 self._sds((B, nb), dtype), self._sds((B, nb), dtype),
                 self._sds((B, *k0.shape), k0.dtype))
-        return self._compile(key, self._make_ell_pipeline(), args, donate)
+        if seeded:
+            args = args + (self._sds((B,), dtype),)
+        return self._compile(key, self._make_ell_pipeline(norm_seeded=seeded)
+                             if seeded else self._make_ell_pipeline(),
+                             args, donate)
 
     def cache_info(self) -> dict:
         return {"hits": self.cache_hits, "misses": self.cache_misses,
                 "entries": len(self._cache)}
+
+    # -- cross-instance norm cache ------------------------------------
+
+    def _norm_fingerprint(self, lp: StandardLP):
+        """Norm-cache key: shape bucket + exact shape + sparsity pattern.
+
+        Sparse instances hash their COO index arrays (blake2b-64), so an
+        estimate is only ever reused across instances with the SAME
+        nonzero pattern — the paper's repeated-structure setting (one
+        constraint template, many coefficient draws).  Index order is
+        hashed as given: a reordered but equal pattern just misses the
+        cache (conservative, never wrong).  Dense instances share one
+        entry per exact shape.
+        """
+        bucket = self._bucket(*lp.K.shape)
+        if isinstance(lp.K, SparseCOO):
+            h = hashlib.blake2b(digest_size=8)
+            h.update(np.ascontiguousarray(
+                np.asarray(lp.K.row, np.int64)).tobytes())
+            h.update(np.ascontiguousarray(
+                np.asarray(lp.K.col, np.int64)).tobytes())
+            return (bucket, tuple(lp.K.shape), int(lp.K.nnz),
+                    h.hexdigest())
+        return (bucket, tuple(lp.K.shape))
 
     # -- solving ------------------------------------------------------
 
@@ -731,16 +862,26 @@ class BatchSolver:
 
     def _collect(self, out, bucket: Tuple[int, int], idxs: Sequence[int],
                  lps: Sequence[StandardLP], results: list) -> None:
-        xs, ys, its, merits = out
+        xs, ys, its, merits = out[:4]
         xs, ys = np.asarray(xs), np.asarray(ys)
         its, merits = np.asarray(its), np.asarray(merits)
-        lanczos = (0 if self.opts.norm_override is not None
-                   else self.opts.lanczos_iters)
+        # trailing rhos (raw norm estimates) arrived with the 5-tuple
+        # pipelines; tolerate legacy 4-tuples (e.g. checkpoints gathered
+        # from pods running an older serialization)
+        rhos = np.asarray(out[4]) if len(out) > 4 else None
+        record_norms = (rhos is not None and self.norm_reuse
+                        and self.opts.norm_override is None)
         for k, i in enumerate(idxs):
             lp = lps[i]
             m, n = lp.K.shape
             x = xs[k, :n]
             it = int(its[k])
+            if self.opts.norm_override is not None:
+                lanczos = 0
+            elif i in self._seeded_idxs:
+                lanczos = NORM_REFINE_ITERS
+            else:
+                lanczos = self.opts.lanczos_iters
             results[i] = BatchItemResult(
                 name=lp.name, x=x, y=ys[k, :m],
                 obj=float(lp.c @ x), iterations=it,
@@ -752,6 +893,12 @@ class BatchSolver:
                     restart=self.opts.restart),
                 sparse=bool(getattr(lp, "is_sparse", False)),
             )
+            if record_norms and np.isfinite(rhos[k]):
+                fp = self._norm_fingerprint(lp)
+                prev = self._norm_cache.get(fp)
+                val = float(rhos[k])
+                self._norm_cache[fp] = (val if prev is None
+                                        else max(prev, val))
 
     def _donate(self, nbytes: int) -> bool:
         return nbytes >= self.donate_min_bytes and _donation_supported()
@@ -768,6 +915,22 @@ class BatchSolver:
         blocks on the solve itself.
         """
         B = self._padded_batch(len(group))
+        # norm-reuse serving: a bucket is seeded only when EVERY member's
+        # fingerprint already has a cached estimate (filler slots reuse
+        # the first member's seed — their results are dropped anyway)
+        rho_seeds = None
+        if self.norm_reuse and self.opts.norm_override is None:
+            cached = [self._norm_cache.get(self._norm_fingerprint(lp))
+                      for lp in group]
+            if all(v is not None for v in cached):
+                # dtype-convert on host: jnp.asarray of a ready numpy
+                # array is a pure transfer, so a first seeded pass never
+                # triggers an eager convert compile (warm streams must
+                # stay at zero)
+                rho_seeds = jnp.asarray(np.asarray(
+                    cached + [cached[0]] * (B - len(group)),
+                    jax.dtypes.canonicalize_dtype(dtype)))
+        seeded = rho_seeds is not None
         # batch padding repeats the first instance; extras are dropped
         filler = [group[0]] * (B - len(group))
         keys = self._instance_keys(idxs, n_total, B)
@@ -780,8 +943,8 @@ class BatchSolver:
                       else jnp.asarray(a, dtype)
                       for i, a in enumerate(stacked)]
             donate = self._donate(arrays[0].nbytes)
-            exe = self._executable_ell(mb, nb, wf, wa, B, dtype,
-                                       donate=donate)
+            exe_fn = functools.partial(self._executable_ell, mb, nb, wf,
+                                       wa, B, dtype, donate=donate)
         elif sig is not None:                            # bare int nnz
             stacked = stack_problems_sparse(group + filler, m=mb, n=nb,
                                             nnz=sig)
@@ -790,8 +953,8 @@ class BatchSolver:
                        jnp.asarray(stacked[1], jnp.int32)]
                       + [jnp.asarray(a, dtype) for a in stacked[2:]])
             donate = self._donate(arrays[0].nbytes)
-            exe = self._executable_sparse(mb, nb, sig, B, dtype,
-                                          donate=donate)
+            exe_fn = functools.partial(self._executable_sparse, mb, nb,
+                                       sig, B, dtype, donate=donate)
         else:
             group = [lp.densified() for lp in group]
             filler = [group[0]] * (B - len(group))
@@ -799,19 +962,34 @@ class BatchSolver:
             stats["dense_stack_bytes"] += sum(a.nbytes for a in stacked)
             arrays = [jnp.asarray(a, dtype) for a in stacked]
             donate = self._donate(arrays[0].nbytes)
-            exe = self._executable(mb, nb, B, dtype, donate=donate)
+            exe_fn = functools.partial(self._executable, mb, nb, B, dtype,
+                                       donate=donate)
+        exe = exe_fn(seeded=seeded)
+        if self.norm_reuse and self.opts.norm_override is None \
+                and not seeded:
+            # cold pass over a new fingerprint set: compile the seeded
+            # twin NOW so the warm stream that will hit the cache later
+            # reports zero compiles (bench_guard --max-warm-compiles 0)
+            exe_fn(seeded=True)
+        if seeded:
+            self._seeded_idxs.update(idxs)
+            stats["norm_seeded_buckets"] += 1
         stats["donated_buckets"] += int(donate)
         sh = self._sharding()
         if sh is not None:
             arrays = [jax.device_put(a, sh) for a in arrays]
             keys = jax.device_put(keys, sh)
+            if seeded:
+                rho_seeds = jax.device_put(rho_seeds, sh)
+        call_args = ((*arrays, keys, rho_seeds) if seeded
+                     else (*arrays, keys))
         if self.transfer_sanitize:
             # inputs are on device by now (the jnp.asarray stacking above
             # is the one sanctioned upload); anything implicit past this
             # point is a serving bug
             with sanitize.no_implicit_transfers():
-                return exe(*arrays, keys)
-        return exe(*arrays, keys)
+                return exe(*call_args)
+        return exe(*call_args)
 
     def _sparse_signature(self, lp: StandardLP):
         """Sparse component of an instance's bucket key: the nnz bucket
@@ -875,9 +1053,11 @@ class BatchSolver:
         mine, remote = self._route(buckets)
 
         results: List[Optional[object]] = [None] * len(lps)
+        self._seeded_idxs = set()
         stats = {"n_buckets": len(buckets), "n_local_buckets": len(mine),
                  "dense_stack_bytes": 0,
                  "sparse_stack_bytes": 0, "donated_buckets": 0,
+                 "norm_seeded_buckets": 0,
                  "dispatch_s": 0.0, "collect_s": 0.0, "compiles": 0}
         compiles0 = sanitize.compile_counts()["compiles"]
         t0 = time.perf_counter()

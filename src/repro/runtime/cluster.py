@@ -393,10 +393,14 @@ class ClusterBatchSolver(BatchSolver):
     def _bucket_served(self, key: BucketKey, idxs, out) -> None:
         if self.n_pods == 1:
             return
-        xs, ys, its, merits = (np.asarray(o) for o in out)
+        xs, ys, its, merits = (np.asarray(o) for o in out[:4])
+        arrays = {"xs": xs, "ys": ys, "its": its, "merits": merits}
+        if len(out) > 4:
+            # raw norm estimates (5-tuple pipelines); remote consumers
+            # feed them into their own norm-reuse cache on fetch
+            arrays["rhos"] = np.asarray(out[4])
         self.transport.publish_bucket(
-            self.stream_seq, bucket_tag(key), self.pod,
-            {"xs": xs, "ys": ys, "its": its, "merits": merits},
+            self.stream_seq, bucket_tag(key), self.pod, arrays,
             {"idxs": list(int(i) for i in idxs)})
 
     # -- gather + straggler policy ------------------------------------
@@ -450,6 +454,8 @@ class ClusterBatchSolver(BatchSolver):
                 idxs = pending.pop(key)
                 out = (ck.arrays["xs"], ck.arrays["ys"],
                        ck.arrays["its"], ck.arrays["merits"])
+                if "rhos" in ck.arrays:     # absent from older pods
+                    out = out + (ck.arrays["rhos"],)
                 self._collect(out, key[0], idxs, lps, results)
                 progress = True
             if progress:

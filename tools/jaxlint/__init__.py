@@ -125,14 +125,16 @@ class Config:
     jit_entry_points: Sequence[tuple] = (
         ("repro/core/engine.py",
          ("solve_core", "pdhg_loop", "pdhg_step", "init_state",
-          "draw_init")),
+          "draw_init", "adaptive_omega_init", "adaptive_shrink",
+          "adaptive_omega_update")),
         ("repro/runtime/batch.py",
          ("_single_solve", "_prep_one", "_prep_one_sparse",
           "_prep_one_ell", "_coo_matvec", "_row_reduce",
           "make_bucket_pipeline", "make_sparse_bucket_pipeline",
           "make_ell_bucket_pipeline")),
         ("repro/core/lanczos.py",
-         ("lanczos_svd_jit_mv", "lanczos_svd_jit", "power_iteration")),
+         ("lanczos_svd_jit_mv", "lanczos_svd_jit", "power_iteration",
+          "power_iteration_mv")),
         ("repro/kernels/ops.py",
          ("crossbar_mvm", "primal_update", "dual_update")),
         ("repro/kernels/sparse_mvm.py", ("ell_matvec", "ell_matvec_ref")),

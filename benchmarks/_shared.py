@@ -50,10 +50,14 @@ def _solve_all():
                 "sigma_true": true_sigma, "backends": {}}
 
         # ---- gpuPDLP: exact solve + analytic GPU cost model ------------
+        import jax as _jax
         t0 = time.perf_counter()
         acc = encode_exact(lp.K)
         lres = lanczos_svd(acc, k_max=64, tol=1e-10)
         res = solve_jit(lp, opts)
+        # results are host numpy today; the explicit fence keeps the
+        # wall-clock honest under async dispatch (jaxlint R7)
+        _jax.block_until_ready((lres.sigma_max, res.obj))
         wall = time.perf_counter() - t0
         led = Ledger()
         nbytes = 8 * (m * n + m + n)
@@ -116,6 +120,7 @@ def _solve_all():
                                noise_keys=True)
             lan_snapshot = led.snapshot()
             rep = solve_crossbar_jit(lp, opts, device=dev, ledger=led)
+            _jax.block_until_ready((lres.sigma_max, rep.result.obj))
             wall = time.perf_counter() - t0
             res = rep.result
             inst["backends"][dev.name] = {

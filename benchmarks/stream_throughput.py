@@ -48,6 +48,17 @@ import time
 
 import numpy as np
 
+
+def block_until_ready(x):
+    """Fence for timing windows (jaxlint R7): today every solve path
+    returns host-materialized numpy results, so this is a no-op — but
+    the explicit block keeps the perf_counter windows honest if a path
+    ever starts returning device arrays under async dispatch."""
+    import jax
+
+    return jax.block_until_ready(x)
+
+
 SMOKE_SHAPES = [(8, 14), (10, 18), (20, 34), (12, 24), (7, 13), (16, 28)]
 FULL_SHAPES = [(8, 14), (10, 18), (20, 34), (12, 24), (7, 13), (16, 28),
                (40, 70), (28, 52), (56, 96), (24, 44)]
@@ -111,15 +122,15 @@ def bench_exact(lps, opts):
         return results
 
     timings = {}
-    t0 = time.perf_counter(); loop_results = per_instance()
+    t0 = time.perf_counter(); loop_results = block_until_ready(per_instance())
     timings["per_instance_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); loop_results = per_instance()
+    t0 = time.perf_counter(); loop_results = block_until_ready(per_instance())
     timings["per_instance_warm_s"] = time.perf_counter() - t0
 
     solver = BatchSolver(opts)
-    t0 = time.perf_counter(); results = solver.solve_stream(lps)
+    t0 = time.perf_counter(); results = block_until_ready(solver.solve_stream(lps))
     timings["batched_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); solver.solve_stream(lps)
+    t0 = time.perf_counter(); block_until_ready(solver.solve_stream(lps))
     timings["batched_warm_s"] = time.perf_counter() - t0
 
     gaps = [abs(r.obj - lp.obj_opt) / max(abs(lp.obj_opt), 1e-12)
@@ -169,9 +180,9 @@ def bench_sparse(lps, opts):
     dense_lps = [lp.densified() for lp in lps]
 
     def timed(solver, stream, tag, timings):
-        t0 = time.perf_counter(); out = solver.solve_stream(stream)
+        t0 = time.perf_counter(); out = block_until_ready(solver.solve_stream(stream))
         timings[f"{tag}_cold_s"] = time.perf_counter() - t0
-        t0 = time.perf_counter(); out = solver.solve_stream(stream)
+        t0 = time.perf_counter(); out = block_until_ready(solver.solve_stream(stream))
         timings[f"{tag}_warm_s"] = time.perf_counter() - t0
         return out
 
@@ -239,15 +250,15 @@ def bench_async(lps, opts):
 
     timings = {}
     sync = BatchSolver(opts, async_dispatch=False)
-    t0 = time.perf_counter(); sync.solve_stream(lps)
+    t0 = time.perf_counter(); block_until_ready(sync.solve_stream(lps))
     timings["sync_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); r_sync = sync.solve_stream(lps)
+    t0 = time.perf_counter(); r_sync = block_until_ready(sync.solve_stream(lps))
     timings["sync_warm_s"] = time.perf_counter() - t0
 
     al = BatchSolver(opts)          # async is the default
-    t0 = time.perf_counter(); al.solve_stream(lps)
+    t0 = time.perf_counter(); block_until_ready(al.solve_stream(lps))
     timings["async_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); r_async = al.solve_stream(lps)
+    t0 = time.perf_counter(); r_async = block_until_ready(al.solve_stream(lps))
     timings["async_warm_s"] = time.perf_counter() - t0
 
     agree = max(abs(a.obj - s.obj) / max(abs(s.obj), 1e-12)
@@ -290,9 +301,9 @@ def bench_cluster(lps, opts, n_pods: int = 2):
     # cleans it up per stream (single-process virtual-pod mode)
     solver = ClusterBatchSolver(opts, pod=0, n_pods=n_pods, live_pods=1,
                                 straggler_timeout=30.0)
-    t0 = time.perf_counter(); results = solver.solve_stream(lps)
+    t0 = time.perf_counter(); results = block_until_ready(solver.solve_stream(lps))
     timings["routed_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); results = solver.solve_stream(lps)
+    t0 = time.perf_counter(); results = block_until_ready(solver.solve_stream(lps))
     timings["routed_warm_s"] = time.perf_counter() - t0
     st = solver.last_stream_stats
 
@@ -317,7 +328,7 @@ def bench_cluster(lps, opts, n_pods: int = 2):
         d["flops_share"] = d["flops_cost"] / total_cost
         pod_solver = BatchSolver(opts)
         pod_solver.solve_stream(pod_instances[pod])          # compile
-        t0 = time.perf_counter(); pod_solver.solve_stream(pod_instances[pod])
+        t0 = time.perf_counter(); block_until_ready(pod_solver.solve_stream(pod_instances[pod]))
         d["warm_s"] = time.perf_counter() - t0
         d["instances_per_s_warm"] = d["n_instances"] / max(d["warm_s"],
                                                            1e-12)
@@ -360,15 +371,15 @@ def bench_device(lps, opts, device):
         return reports
 
     timings = {}
-    t0 = time.perf_counter(); loop_reports = per_instance()
+    t0 = time.perf_counter(); loop_reports = block_until_ready(per_instance())
     timings["per_instance_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); loop_reports = per_instance()
+    t0 = time.perf_counter(); loop_reports = block_until_ready(per_instance())
     timings["per_instance_warm_s"] = time.perf_counter() - t0
 
     solver = CrossbarBatchSolver(opts, device=device)
-    t0 = time.perf_counter(); reports = solver.solve_stream(lps)
+    t0 = time.perf_counter(); reports = block_until_ready(solver.solve_stream(lps))
     timings["batched_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); reports = solver.solve_stream(lps)
+    t0 = time.perf_counter(); reports = block_until_ready(solver.solve_stream(lps))
     timings["batched_warm_s"] = time.perf_counter() - t0
 
     gaps = [abs(rep.result.obj - lp.obj_opt) / max(abs(lp.obj_opt), 1e-12)
@@ -408,16 +419,16 @@ def bench_adaptive(lps, opts):
 
     timings = {}
     solver_f = BatchSolver(opts)
-    t0 = time.perf_counter(); r_fixed = solver_f.solve_stream(lps)
+    t0 = time.perf_counter(); r_fixed = block_until_ready(solver_f.solve_stream(lps))
     timings["fixed_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); r_fixed = solver_f.solve_stream(lps)
+    t0 = time.perf_counter(); r_fixed = block_until_ready(solver_f.solve_stream(lps))
     timings["fixed_warm_s"] = time.perf_counter() - t0
 
     solver_a = BatchSolver(dataclasses.replace(opts,
                                                step_rule="adaptive"))
-    t0 = time.perf_counter(); r_adapt = solver_a.solve_stream(lps)
+    t0 = time.perf_counter(); r_adapt = block_until_ready(solver_a.solve_stream(lps))
     timings["adaptive_cold_s"] = time.perf_counter() - t0
-    t0 = time.perf_counter(); r_adapt = solver_a.solve_stream(lps)
+    t0 = time.perf_counter(); r_adapt = block_until_ready(solver_a.solve_stream(lps))
     timings["adaptive_warm_s"] = time.perf_counter() - t0
 
     ratios = [f.iterations / max(a.iterations, 1)
@@ -449,9 +460,9 @@ def bench_norm_reuse(lps, opts):
     from repro.runtime import BatchSolver
 
     solver = BatchSolver(opts, norm_reuse=True)
-    t0 = time.perf_counter(); r1 = solver.solve_stream(lps)
+    t0 = time.perf_counter(); r1 = block_until_ready(solver.solve_stream(lps))
     cold_s = time.perf_counter() - t0
-    t0 = time.perf_counter(); r2 = solver.solve_stream(lps)
+    t0 = time.perf_counter(); r2 = block_until_ready(solver.solve_stream(lps))
     warm_s = time.perf_counter() - t0
     agree = max(abs(a.obj - b.obj) / max(abs(b.obj), 1e-12)
                 for a, b in zip(r2, r1))

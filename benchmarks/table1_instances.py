@@ -26,6 +26,9 @@ def run():
             from repro.core import PDHGOptions, solve_jit
             r = solve_jit(lp, PDHGOptions(max_iters=60000, tol=1e-8))
             solver, obj = "pdhg-hp", r.obj
+        # simplex branch is pure host; solve_jit returns host numpy —
+        # the fence makes the window honest either way (jaxlint R7)
+        jax.block_until_ready(obj)
         dt = time.perf_counter() - t0
         rows.append((name, f"{m}x{n}", f"{lp.obj_opt:.4f}", f"{obj:.4f}",
                      solver, f"{dt:.2f}"))

@@ -700,7 +700,7 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     # trace time, so these bool() calls never touch the device
     restart = bool(static[9]) if len(static) > 9 else True  # jaxlint: disable=R5
     megakernel = bool(static[11]) if len(static) > 11 else False  # jaxlint: disable=R5
-    step_rule = str(static[12]) if len(static) > 12 else "fixed"  # jaxlint: disable=R5
+    step_rule = str(static[12]) if len(static) > 12 else "fixed"
     m, n = b.shape[0], c.shape[0]
     # an all-zero operator (degenerate but legal: the optimum is just the
     # box projection of -c's direction) has rho = 0; unguarded it makes
@@ -737,13 +737,40 @@ def lemma2_margin(rho, sigma_read: float):
     return rho / (1.0 - min(4.0 * sigma_read, 0.5))
 
 
+# Per-window accounting pieces.  These three are the GROUND TRUTH the
+# trace-level audit (tools/traceaudit) independently reproduces by
+# counting MVM-bearing primitives in the jaxpr of every solver path —
+# change any of them and the audit fails until the traced computation
+# (or TRACE_BASELINE.json) agrees again.
+
+#: MVMs per PDHG half-iteration pair: one forward (K @ x_bar) for the
+#: dual update + one adjoint (K^T @ y) for the primal update.
+MVMS_PER_ITERATION = 2
+
+
+def mvms_per_check(restart: bool = True) -> int:
+    """MVMs charged per residual check: an x/y pair for the current
+    iterate, plus a second pair for the averaged iterate when restarts
+    are enabled (with ``restart=False`` the averaged pair is never
+    evaluated)."""
+    return 4 if restart else 2
+
+
+def mvm_window_budget(check_every: int, restart: bool = True) -> int:
+    """MVMs per while_loop body execution (one check window): the
+    ``check_every`` fused/stepped PDHG iterations plus the residual
+    check.  ``step_rule="adaptive"`` rebalances from already-computed
+    quantities and adds exactly zero — the traceaudit budget checker
+    asserts this per path."""
+    return MVMS_PER_ITERATION * check_every + mvms_per_check(restart)
+
+
 def mvm_accounting(iterations: int, check_every: int,
                    lanczos_iters: int, restart: bool = True) -> int:
     """Device-MVM total for the energy ledger, shared by every jitted
     path: norm estimation (1 MVM per Lanczos/power iteration; 0 under
-    ``norm_override``) + PDHG (2/iter) + residual checks (4 per check:
-    x/y pair for the current AND the averaged iterate; with restarts
-    gated off the averaged pair is never evaluated, so checks charge 2).
+    ``norm_override``) + PDHG (``MVMS_PER_ITERATION``/iter) + residual
+    checks (``mvms_per_check(restart)`` each).
 
     ``iterations`` on EVERY jitted path — stepped fori_loop and fused
     megakernel alike — advances by ``check_every`` per while_loop body,
@@ -753,4 +780,5 @@ def mvm_accounting(iterations: int, check_every: int,
     was genuinely spent.  Megakernel and stepped paths agree exactly —
     a test pins this (``tests/test_step_rules.py``)."""
     n_checks = max(1, iterations // max(1, check_every))
-    return lanczos_iters + 2 * iterations + (4 if restart else 2) * n_checks
+    return (lanczos_iters + MVMS_PER_ITERATION * iterations
+            + mvms_per_check(restart) * n_checks)

@@ -86,6 +86,28 @@ def _split_computations(text: str) -> Dict[str, List[str]]:
     return comps
 
 
+def propagate_multipliers(nodes, edges) -> Dict[str, float]:
+    """Fixed-point trip-count propagation over a loop-nesting graph.
+
+    ``nodes`` are computation/region identifiers; ``edges`` are
+    ``(parent, body, trip)`` triples meaning *parent executes body trip
+    times per own execution*.  Returns node -> total execution
+    multiplier (nested loops multiply).  Shared between the HLO-text
+    parser here and the jaxpr walker in ``tools/traceaudit``."""
+    mult: Dict[str, float] = {name: 1.0 for name in nodes}
+    # loops nest at most a few levels; fixed-point iterate
+    for _ in range(max(8, len(edges) + 1)):
+        changed = False
+        for parent, body, trip in edges:
+            new = mult.get(parent, 1.0) * trip
+            if body in mult and abs(mult[body] - new) > 1e-9:
+                mult[body] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
 def _loop_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
     """computation -> execution multiplier from enclosing loop trip counts."""
     # find (parent_comp, body_comp, trip) triples
@@ -102,18 +124,7 @@ def _loop_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
             if tm:
                 trip = float(tm.group(1) or tm.group(2))
             edges.append((name, bm.group(1), trip))
-    mult: Dict[str, float] = {name: 1.0 for name in comps}
-    # propagate (loops nest at most a few levels; fixed-point iterate)
-    for _ in range(8):
-        changed = False
-        for parent, body, trip in edges:
-            new = mult.get(parent, 1.0) * trip
-            if body in mult and abs(mult[body] - new) > 1e-9:
-                mult[body] = new
-                changed = True
-        if not changed:
-            break
-    return mult
+    return propagate_multipliers(comps, edges)
 
 
 @dataclasses.dataclass

@@ -5,6 +5,7 @@ from repro.launch.hlo import (
     CostEstimate,
     estimate_costs,
     parse_collectives,
+    propagate_multipliers,
     scan_trip_counts,
     shape_bytes,
 )
@@ -64,6 +65,107 @@ def test_flops_trip_scaled():
     est = estimate_costs(SAMPLE)
     # dot 128x256 @ 256x256 = 2*128*256*256 flops, x7 trips
     np.testing.assert_allclose(est.flops, 2 * 128 * 256 * 256 * 7)
+
+
+NESTED = """HloModule nested_whiles, is_scheduled=true
+
+%inner_body.1 (a: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %a = (s32[], f32[64]) parameter(0)
+  %g0 = s32[] get-tuple-element(%a), index=0
+  %g1 = f32[64]{0} get-tuple-element(%a), index=1
+  %ar = f32[64]{0} all-reduce(%g1), channel_id=1, replica_groups={}
+  ROOT %t = (s32[], f32[64]{0}) tuple(%g0, %ar)
+}
+
+%inner_cond.1 (a2: (s32[], f32[64])) -> pred[] {
+  %a2 = (s32[], f32[64]) parameter(0)
+  ROOT %lt = pred[] compare(%a2, %a2), direction=LT
+}
+
+%outer_body.1 (b: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %b = (s32[], f32[64]) parameter(0)
+  %while.inner = (s32[], f32[64]{0}) while(%b), condition=%inner_cond.1, body=%inner_body.1, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %t2 = (s32[], f32[64]{0}) tuple(%while.inner)
+}
+
+%outer_cond.1 (b2: (s32[], f32[64])) -> pred[] {
+  %b2 = (s32[], f32[64]) parameter(0)
+  ROOT %lt2 = pred[] compare(%b2, %b2), direction=LT
+}
+
+ENTRY %main.2 (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  %init = (s32[], f32[64]{0}) tuple(%p, %p)
+  %while.outer = (s32[], f32[64]{0}) while(%init), condition=%outer_cond.1, body=%outer_body.1, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %o = f32[64]{0} get-tuple-element(%while.outer), index=1
+}
+"""
+
+
+def test_nested_while_multiplies_trip_counts():
+    stats = parse_collectives(NESTED)
+    assert scan_trip_counts(NESTED) == [5, 3]
+    # all-reduce in the inner body: 2x bytes x (3 outer x 5 inner) trips
+    np.testing.assert_allclose(stats.bytes_by_kind["all-reduce"],
+                               64 * 4 * 2 * 15)
+    assert stats.counts == {"all-reduce": 1}
+    np.testing.assert_allclose(stats.static_bytes, 64 * 4 * 2)
+
+
+COND = """HloModule cond_collectives, is_scheduled=true
+
+%true_comp.1 (t: f32[32]) -> f32[64] {
+  %t = f32[32]{0} parameter(0)
+  ROOT %ag = f32[64]{0} all-gather(%t), dimensions={0}
+}
+
+%false_comp.1 (f: f32[32]) -> f32[64] {
+  %f = f32[32]{0} parameter(0)
+  %ar2 = f32[32]{0} all-reduce(%f), channel_id=2, replica_groups={}
+  ROOT %bc = f32[64]{0} broadcast(%ar2), dimensions={0}
+}
+
+ENTRY %main.3 (p2: f32[32], q: pred[]) -> f32[64] {
+  %p2 = f32[32]{0} parameter(0)
+  %q = pred[] parameter(1)
+  ROOT %c = f32[64]{0} conditional(%q, %p2, %p2), true_computation=%true_comp.1, false_computation=%false_comp.1
+}
+"""
+
+
+def test_cond_branch_collectives_counted_unscaled():
+    """Both arms of a conditional are charged at 1x: the roofline upper
+    bound does not know which branch runs, and neither arm is a loop."""
+    stats = parse_collectives(COND)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1}
+    np.testing.assert_allclose(stats.bytes_by_kind["all-gather"], 64 * 4)
+    np.testing.assert_allclose(stats.bytes_by_kind["all-reduce"],
+                               32 * 4 * 2)
+
+
+def test_while_without_known_trip_count_defaults_to_one():
+    """Regression: a while lowered WITHOUT backend_config (trip count
+    unknowable) must parse gracefully — no crash, trip defaults to 1."""
+    unknown = NESTED.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "").replace(
+        ', backend_config={"known_trip_count":{"n":"3"}}', "")
+    assert scan_trip_counts(unknown) == []
+    stats = parse_collectives(unknown)
+    np.testing.assert_allclose(stats.bytes_by_kind["all-reduce"],
+                               64 * 4 * 2)
+
+
+def test_propagate_multipliers_converges_out_of_order():
+    """The shared fixed-point walker (hlo parser + traceaudit): edges
+    listed child-first still converge to the product of enclosing trips."""
+    nodes = {"root": None, "a": None, "b": None, "c": None, "free": None}
+    edges = [("b", "c", 5.0), ("a", "b", 4.0), ("root", "a", 3.0)]
+    mult = propagate_multipliers(nodes, edges)
+    assert mult == {"root": 1.0, "a": 3.0, "b": 12.0, "c": 60.0,
+                    "free": 1.0}
+    # an edge to an unknown body is ignored, not an error
+    assert propagate_multipliers({"x": None}, [("x", "ghost", 9.0)]) == \
+        {"x": 1.0}
 
 
 def test_real_compile_matches_analytic():

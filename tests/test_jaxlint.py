@@ -19,8 +19,10 @@ from tools.jaxlint import (  # noqa: E402
 )
 
 FIXTURES = REPO_ROOT / "tools" / "jaxlint" / "fixtures"
-# fixtures exercise R5's hot-path scoping by declaring themselves hot
-FIXTURE_CFG = Config(hot_paths=("fixtures/",))
+# fixtures exercise R5's hot-path scoping by declaring themselves hot,
+# and R7's benchmark scoping by declaring only the r7_* pair benchmarks
+FIXTURE_CFG = Config(hot_paths=("fixtures/",),
+                     bench_paths=("fixtures/r7_",))
 
 # rule -> (bad fixture finding count, historical bug it reproduces)
 EXPECTED = {
@@ -29,6 +31,8 @@ EXPECTED = {
     "R3": 1,    # time.time() duration in the benchmark harness
     "R4": 2,    # Python while/if on jnp values under jit
     "R5": 3,    # float()/.item()/np.asarray in a traced hot path
+    "R6": 2,    # carried-along stale pragma + unknown-rule typo
+    "R7": 2,    # cold and warm windows both closing unsynchronized
 }
 
 
@@ -52,8 +56,54 @@ def test_pragma_suppresses_and_is_rule_specific():
         wall2 = time.time() - t0  # jaxlint: disable=R2
     """)
     findings = lint_source(src, "x.py")
-    # the R3 pragma eats line 3; the R2 pragma on line 4 does NOT
-    assert [(f.rule, f.line) for f in findings] == [("R3", 4)]
+    # the R3 pragma eats line 3; the R2 pragma on line 4 does NOT — and
+    # since R2 never fires on line 4 it is additionally a stale pragma
+    assert [(f.rule, f.line) for f in findings] == [("R3", 4), ("R6", 4)]
+
+
+def test_r6_stale_pragma_and_unknown_rule():
+    src = textwrap.dedent("""\
+        import time
+        t0 = time.perf_counter()
+        wall = time.perf_counter() - t0  # jaxlint: disable=R3
+        n = 1  # jaxlint: disable=R99
+    """)
+    findings = lint_source(src, "x.py")
+    assert [(f.rule, f.line) for f in findings] == [("R6", 3), ("R6", 4)]
+    assert "stale" in findings[0].message
+    assert "unknown rule" in findings[1].message
+
+
+def test_r6_self_suppression_and_in_string_pragmas():
+    src = textwrap.dedent("""\
+        import time
+        n = 1  # jaxlint: disable=R3,R6
+        doc = "example pragma:  # jaxlint: disable=R2"
+    """)
+    # line 2: R3 is stale but R6 on the same line self-suppresses;
+    # line 3: the pragma lives inside a string literal — not a pragma
+    assert lint_source(src, "x.py") == []
+
+
+def test_r7_scoped_to_benchmarks_and_reused_timer_names():
+    src = textwrap.dedent("""\
+        import time
+        import jax
+
+        def bench(solver, lps):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(solver.solve(lps))
+            cold = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            out = solver.solve(lps)
+            warm = time.perf_counter() - t0
+            return out, cold, warm
+    """)
+    findings = lint_source(src, "benchmarks/bench_x.py")
+    # the reused ``t0`` must anchor the SECOND window only: the first
+    # window is fenced, the second is not
+    assert [(f.rule, f.line) for f in findings] == [("R7", 10)]
+    assert lint_source(src, "src/repro/x.py") == []
 
 
 def test_r1_missing_allowlist_is_one_finding():
@@ -159,3 +209,17 @@ def test_cli_exit_codes():
     assert main(["--list-rules"]) == 0
     assert main([str(FIXTURES / "r3_good.py")]) == 0
     assert main([str(FIXTURES / "r3_bad.py")]) == 1
+
+
+def test_cli_json_output(capsys):
+    import json
+
+    from tools.jaxlint.__main__ import main
+    assert main(["--json", str(FIXTURES / "r3_bad.py")]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert [sorted(entry) for entry in payload] == \
+        [["file", "line", "message", "rule"]]
+    assert payload[0]["rule"] == "R3" and payload[0]["line"] > 0
+
+    assert main(["--json", str(FIXTURES / "r3_good.py")]) == 0
+    assert json.loads(capsys.readouterr().out) == []

@@ -46,19 +46,36 @@ R5  host-sync in hot paths.  ``.item()``, ``numpy.asarray``/``array``,
     implicit device->host sync that destroys async dispatch (and is
     exactly what the runtime transfer sanitizer traps at run time).
 
+R6  stale pragma.  A ``# jaxlint: disable=RX`` on a line where rule RX
+    no longer fires is itself a finding — suppressions must stay
+    justified, and a pragma that outlives its finding silently licenses
+    the next real instance of the bug.  Pragmas naming unknown rule ids
+    are flagged too.  ``disable=R6`` on the same line self-suppresses
+    (for the rare pragma that is only conditionally live).
+
+R7  benchmark timing windows.  A ``time.perf_counter()`` start/stop
+    pair in ``benchmarks/`` must contain a ``block_until_ready`` call
+    (method or ``jax.block_until_ready``) before the closing read —
+    JAX dispatch is async, so an unsynchronized window times the
+    enqueue, not the computation, and the numbers are fiction.
+
 Pragmas: append ``# jaxlint: disable=R2`` (comma-separate for several
 rules) to a line to suppress findings anchored there — every pragma in
-this repo must carry a one-line justification.
+this repo must carry a one-line justification.  R6 keeps the pragma
+inventory honest: a suppression whose rule no longer fires must be
+deleted, not carried.
 """
 from __future__ import annotations
 
 import ast
 import dataclasses
+import io
 import re
+import tokenize
 from pathlib import Path
 from typing import Iterable, List, Optional, Sequence
 
-RULE_IDS = ("R1", "R2", "R3", "R4", "R5")
+RULE_IDS = ("R1", "R2", "R3", "R4", "R5", "R6", "R7")
 
 RULE_SUMMARIES = {
     "R1": "cache-key completeness (Options fields vs opts_static + "
@@ -69,6 +86,9 @@ RULE_SUMMARIES = {
           "traced code)",
     "R5": "host-sync in hot paths (.item()/np.asarray/float() under "
           "tracing)",
+    "R6": "stale pragma (disable= for a rule that no longer fires here)",
+    "R7": "benchmark timing window without block_until_ready before the "
+          "closing perf_counter read",
 }
 
 _PRAGMA_RE = re.compile(r"#\s*jaxlint:\s*disable=([A-Z0-9,\s]+)")
@@ -119,6 +139,8 @@ class Config:
     )
     # R2(a) hardcoded-key allowlist: test/example trees may pin seeds
     prng_allow: Sequence[str] = ("tests/", "examples/", "conftest.py")
+    # R7 applies only inside these path fragments (posix, substring match)
+    bench_paths: Sequence[str] = ("benchmarks/",)
     # extra jit-entry functions per path fragment (cross-module jit
     # targets the per-module decorator scan cannot see, e.g.
     # ``jax.jit(engine.solve_core, ...)`` living in core/pdhg.py)
@@ -155,6 +177,9 @@ class Config:
 
     def prng_allowed(self, path: str) -> bool:
         return any(frag in path for frag in self.prng_allow)
+
+    def is_bench_path(self, path: str) -> bool:
+        return any(frag in path for frag in self.bench_paths)
 
     def entry_points_for(self, path: str) -> frozenset:
         names: set = set()
@@ -206,12 +231,28 @@ def _contains_jnp(node: ast.AST) -> bool:
 
 
 def _pragma_lines(source: str) -> dict:
-    """line number -> set of disabled rule ids."""
+    """line number -> set of disabled rule ids.
+
+    Tokenize-based: only REAL comments count, so a pragma spelled inside
+    a string literal (fixture sources, docstring examples) neither
+    suppresses anything nor registers as stale for R6.  Falls back to a
+    line scan when the file does not tokenize (lint_source has already
+    bailed on syntax errors by then, so this is belt-and-braces)."""
     out = {}
-    for i, text in enumerate(source.splitlines(), start=1):
-        mt = _PRAGMA_RE.search(text)
-        if mt:
-            out[i] = {r.strip() for r in mt.group(1).split(",") if r.strip()}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type != tokenize.COMMENT:
+                continue
+            mt = _PRAGMA_RE.search(tok.string)
+            if mt:
+                out[tok.start[0]] = {
+                    r.strip() for r in mt.group(1).split(",") if r.strip()}
+    except (tokenize.TokenError, IndentationError):
+        for i, text in enumerate(source.splitlines(), start=1):
+            mt = _PRAGMA_RE.search(text)
+            if mt:
+                out[i] = {r.strip() for r in mt.group(1).split(",")
+                          if r.strip()}
     return out
 
 
@@ -641,6 +682,101 @@ def rule_r5(tree: ast.Module, path: str, cfg: Config) -> List[Finding]:
     return findings
 
 
+# ----------------------------------------- R7: benchmark timing windows ---
+
+def _scope_own_nodes(scope, is_module: bool):
+    """Nodes belonging to ``scope`` but not to any nested function."""
+    nested = {
+        id(sub)
+        for n in ast.walk(scope)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        and (is_module or n is not scope)
+        for sub in ast.walk(n)}
+    return [n for n in ast.walk(scope) if id(n) not in nested]
+
+
+def _is_perf_counter(node: ast.AST) -> bool:
+    return _call_chain(node) in ("time.perf_counter", "perf_counter")
+
+
+def rule_r7(tree: ast.Module, path: str, cfg: Config) -> List[Finding]:
+    """Every perf_counter start->stop subtraction in a benchmark must
+    bracket a ``block_until_ready`` call, else async dispatch means the
+    window times the enqueue, not the work."""
+    if not cfg.is_bench_path(path):
+        return []
+    findings = []
+    for scope in [tree, *list(_functions(tree))]:
+        own = _scope_own_nodes(scope, isinstance(scope, ast.Module))
+        perf_assigns: dict = {}       # name -> sorted assign lines
+        sync_lines = []
+        windows = []                  # (start_line, end_line)
+        for node in own:
+            if isinstance(node, ast.Assign) and _is_perf_counter(node.value):
+                for tgt in node.targets:
+                    for name in _target_names(tgt):
+                        perf_assigns.setdefault(name, []).append(node.lineno)
+            if isinstance(node, ast.Call):
+                chain = _call_chain(node) or ""
+                if chain.split(".")[-1] == "block_until_ready":
+                    sync_lines.append(node.lineno)
+        for node in own:
+            if not (isinstance(node, ast.BinOp)
+                    and isinstance(node.op, ast.Sub)):
+                continue
+            starts = []
+            for op in (node.left, node.right):
+                if isinstance(op, ast.Name) and op.id in perf_assigns:
+                    # timer names get reused across windows in one scope:
+                    # this read closes the LATEST assignment before it
+                    prior = [ln for ln in perf_assigns[op.id]
+                             if ln <= node.lineno]
+                    if prior:
+                        starts.append(max(prior))
+            if starts:
+                windows.append((min(starts), node.lineno))
+        for start, end in windows:
+            if not any(start <= ln <= end for ln in sync_lines):
+                findings.append(Finding(
+                    path, end, "R7",
+                    "perf_counter timing window (opened at line "
+                    f"{start}) closes without a block_until_ready — "
+                    "async dispatch makes this time the enqueue, not "
+                    "the computation"))
+    return findings
+
+
+# ------------------------------------------------- R6: stale pragmas ---
+
+def rule_r6(findings: List[Finding], pragmas: dict, path: str,
+            cfg: Config) -> List[Finding]:
+    """A pragma entry whose rule did not fire on that line is stale.
+
+    Runs AFTER the other rules so it can see what actually fired.
+    ``R6`` entries themselves are exempt (they exist to self-suppress
+    this rule); disabled rules are exempt too (a partial ``--select``
+    run cannot judge pragmas for rules it never executed)."""
+    fired = {(f.line, f.rule) for f in findings}
+    out = []
+    for line, rules in sorted(pragmas.items()):
+        for rid in sorted(rules):
+            if rid == "R6":
+                continue
+            if rid not in RULE_IDS:
+                out.append(Finding(
+                    path, line, "R6",
+                    f"pragma disables unknown rule {rid!r} — typo or "
+                    "removed rule; delete the entry"))
+            elif cfg.rule_enabled(rid) and (line, rid) not in fired:
+                out.append(Finding(
+                    path, line, "R6",
+                    f"stale pragma: {rid} does not fire on this line "
+                    "any more — delete the suppression (or the whole "
+                    "pragma) so it cannot silently license the next "
+                    "real instance"))
+    return out
+
+
 # ------------------------------------------------------------- driver ---
 
 def lint_source(source: str, path: str,
@@ -663,7 +799,11 @@ def lint_source(source: str, path: str,
         findings.extend(rule_r4(tree, path, cfg))
     if cfg.rule_enabled("R5"):
         findings.extend(rule_r5(tree, path, cfg))
+    if cfg.rule_enabled("R7"):
+        findings.extend(rule_r7(tree, path, cfg))
     pragmas = _pragma_lines(source)
+    if cfg.rule_enabled("R6"):
+        findings.extend(rule_r6(findings, pragmas, path, cfg))
     kept = [f for f in findings
             if f.rule not in pragmas.get(f.line, set())]
     return sorted(kept, key=lambda f: (f.path, f.line, f.rule))

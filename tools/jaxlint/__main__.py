@@ -1,12 +1,14 @@
 """CLI: ``python -m tools.jaxlint [paths...]``.
 
 Walks ``*.py`` under each path (default: ``src tests benchmarks``),
-prints findings as ``path:line: RULE message``, and exits 1 when any
-undisabled finding remains.
+prints findings as ``path:line: RULE message`` (or a JSON array of
+``{"file", "line", "rule", "message"}`` objects under ``--json``), and
+exits 1 when any undisabled finding remains.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from . import DEFAULT_CONFIG, RULE_IDS, RULE_SUMMARIES, Config, \
@@ -27,6 +29,9 @@ def main(argv=None) -> int:
                          f"(default: all of {','.join(RULE_IDS)})")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalogue and exit")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as a JSON array "
+                         "(file/line/rule/message) for CI annotation")
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -45,8 +50,14 @@ def main(argv=None) -> int:
 
     files = iter_python_files(args.paths)
     findings = lint_paths(args.paths, cfg)
-    for f in findings:
-        print(f)
+    if args.as_json:
+        print(json.dumps(
+            [{"file": f.path, "line": f.line, "rule": f.rule,
+              "message": f.message} for f in findings],
+            indent=2))
+    else:
+        for f in findings:
+            print(f)
     n = len(findings)
     print(f"jaxlint: {n} finding{'s' if n != 1 else ''} "
           f"in {len(files)} files", file=sys.stderr)

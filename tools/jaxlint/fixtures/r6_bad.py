@@ -1,0 +1,18 @@
+"""R6 fixture (BAD): pragmas that outlived their findings.
+
+The first pragma was written when the line still used ``time.time()``;
+the timing was later fixed but the suppression was carried along, where
+it would silently license the next real R3 on that line.  The second
+names a rule id that never existed — a typo that has been suppressing
+nothing (and reviewers assumed it was load-bearing).
+"""
+import time
+
+
+def bench(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0  # jaxlint: disable=R3
+
+
+TOPK = 10  # jaxlint: disable=R9

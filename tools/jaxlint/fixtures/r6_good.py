@@ -1,0 +1,19 @@
+"""R6 fixture (GOOD): every pragma is live — the rule it disables
+really fires on that line — and the one deliberate exception carries
+``R6`` itself (the self-suppression escape hatch for pragmas that are
+only conditionally live, e.g. kept for a config the default lint run
+does not exercise)."""
+import time
+
+
+def poll_wall_clock(fn):
+    # deliberate wall-clock duration: this harness reports NTP-visible
+    # time on purpose, justification documented here (pragma is LIVE)
+    t0 = time.time()
+    fn()
+    return time.time() - t0  # jaxlint: disable=R3
+
+
+# R2 only fires here under a config whose prng_allow excludes this tree;
+# the R6 entry keeps the default run from calling the pragma stale.
+SEED_NOTE = "PRNGKey(7)"  # jaxlint: disable=R2,R6

@@ -1,0 +1,17 @@
+"""R7 fixture (BAD): the benchmark-timing bug class — JAX dispatch is
+asynchronous, so a ``perf_counter`` window that never synchronizes
+times the ENQUEUE of the work, not the work.  Both windows here close
+without any ``block_until_ready``; the reported "speedup" of the warm
+path is fiction (the device is still solving when the clock stops)."""
+import time
+
+
+def bench_solver(solver, batch):
+    t0 = time.perf_counter()
+    cold = solver.solve_stream(batch)
+    cold_s = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    warm = solver.solve_stream(batch)
+    warm_s = time.perf_counter() - t1
+    return cold, warm, cold_s, warm_s

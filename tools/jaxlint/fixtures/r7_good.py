@@ -1,0 +1,28 @@
+"""R7 fixture (GOOD): every timing window synchronizes before the
+closing read — either ``jax.block_until_ready`` around the result (a
+no-op on host values, so always safe) or the array method.  The
+host-only window at the bottom shows the pragma policy: nothing async
+inside, justification on the line."""
+import time
+
+import jax
+
+
+def bench_wrapped(solver, batch):
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(solver.solve_stream(batch))
+    return out, time.perf_counter() - t0
+
+
+def bench_method(solver, batch):
+    t0 = time.perf_counter()
+    out = solver.solve_stream(batch)
+    out.block_until_ready()
+    return out, time.perf_counter() - t0
+
+
+def bench_parse(path):
+    t0 = time.perf_counter()
+    rows = path.read_text().splitlines()
+    # host-only parse, nothing dispatched to a device
+    return rows, time.perf_counter() - t0  # jaxlint: disable=R7

@@ -1,0 +1,116 @@
+"""CLI: ``python -m tools.traceaudit``.
+
+Traces the full supported path matrix on tiny shapes (CPU, x64) and
+runs the four analyzers; exits 1 on any finding.  ``--update-baseline``
+regenerates ``TRACE_BASELINE.json`` instead of diffing against it (for
+PRs that intentionally change traced structure — commit the new file
+with the change that explains it).  ``--json`` emits machine-readable
+findings; ``--diff-out`` additionally writes the human report to a file
+(the CI job uploads it as an artifact on failure).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# pin the platform BEFORE anything imports jax: the audit is CPU-only
+# by construction (structure, not performance)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from . import (  # noqa: E402
+    BASELINE_PATH,
+    audit_paths,
+    load_baseline,
+    save_baseline,
+    supported_paths,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.traceaudit",
+        description="trace-level audit of every solver path "
+                    "(see tools/traceaudit/__init__.py)")
+    ap.add_argument("--paths", default=None,
+                    help="comma-separated substrings; audit only path "
+                         "names matching ANY of them (default: all)")
+    ap.add_argument("--list-paths", action="store_true",
+                    help="print the supported path matrix and exit")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="regenerate TRACE_BASELINE.json from the "
+                         "current traces instead of diffing")
+    ap.add_argument("--baseline", default=str(BASELINE_PATH),
+                    help="baseline file (default: the committed one)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as a JSON array "
+                         "(file/line/rule/message) for CI annotation")
+    ap.add_argument("--diff-out", default=None,
+                    help="also write the human-readable report to this "
+                         "file (CI uploads it on failure)")
+    args = ap.parse_args(argv)
+
+    specs = supported_paths()
+    if args.list_paths:
+        for s in specs:
+            print(s.name)
+        return 0
+    full_matrix = args.paths is None
+    if args.paths:
+        frags = [f.strip() for f in args.paths.split(",") if f.strip()]
+        specs = [s for s in specs
+                 if any(f in s.name for f in frags)]
+        if not specs:
+            ap.error(f"no supported path matches {frags}")
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    if args.update_baseline:
+        records, findings, _ = audit_paths(specs)
+        hard = [f for f in findings if f.analyzer != "fingerprint"]
+        if hard:
+            for f in hard:
+                print(f, file=sys.stderr)
+            print("traceaudit: refusing to write a baseline over "
+                  f"{len(hard)} non-fingerprint finding(s)",
+                  file=sys.stderr)
+            return 1
+        if not full_matrix:
+            print("traceaudit: --update-baseline requires the full "
+                  "matrix (drop --paths)", file=sys.stderr)
+            return 1
+        save_baseline(records, args.baseline)
+        print(f"traceaudit: wrote {args.baseline} "
+              f"({len(records)} paths, jax {jax.__version__})")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    if baseline is None:
+        print(f"traceaudit: no baseline at {args.baseline} — run "
+              "--update-baseline and commit it", file=sys.stderr)
+        return 1
+    records, findings, notes = audit_paths(specs, baseline, full_matrix)
+
+    report_lines = [str(f) for f in findings]
+    if args.as_json:
+        print(json.dumps(
+            [{"file": f.path, "line": 0, "rule": f.analyzer,
+              "message": f.message} for f in findings], indent=2))
+    else:
+        for line in report_lines:
+            print(line)
+    for note in notes:
+        print(f"note: {note}", file=sys.stderr)
+    if args.diff_out and findings:
+        with open(args.diff_out, "w") as fh:
+            fh.write("\n".join(report_lines) + "\n")
+    n = len(findings)
+    print(f"traceaudit: {n} finding{'s' if n != 1 else ''} across "
+          f"{len(records)} traced paths", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,8 +3,9 @@
 CI runs this right after the smoke stream benchmark:
 
   1. **Schema validation** — the candidate record must be
-     ``bench_stream/v6``: every serving path (dense batched /
-     per-instance, crossbar batched / per-instance, the three sparse
+     ``bench_stream/v7``: every serving path (dense batched /
+     per-instance, crossbar batched / per-instance, the
+     mixed-precision refined crossbar solve, the three sparse
      backends — default ELL, nnz-bucketed BCOO, ELL + fused
      multi-iteration megakernel — and the densified sparse baseline,
      async + sync dispatch, per-pod routed cluster serving, the
@@ -15,12 +16,13 @@ CI runs this right after the smoke stream benchmark:
      ``sparse`` host-memory summary, the ``cluster`` routing summary
      (non-empty routing table, per-pod throughput shares), the
      ``adaptive`` iteration-reduction summary, the ``norm_reuse``
-     summary, and the ``sanitize`` section (per-path warm-pass XLA
-     compile counts from ``repro.runtime.sanitize``).
+     summary, the ``refinement`` acceptance summary, and the
+     ``sanitize`` section (per-path warm-pass XLA compile counts from
+     ``repro.runtime.sanitize``).
   2. **Regression gate** — the warm BUCKETED paths (the steady-state
      serving numbers) must not regress more than ``--max-regression``
      (default 2x) against the committed baseline
-     (``git show HEAD:BENCH_stream.json`` in CI).  v1-v5 baselines are
+     (``git show HEAD:BENCH_stream.json`` in CI).  v1-v6 baselines are
      accepted: only the path keys both records share are compared.
   3. **Sparse-wins gate** — the acceptance criterion of the ELL
      backend: the default sparse pipeline's warm serving must be at
@@ -32,7 +34,14 @@ CI runs this right after the smoke stream benchmark:
      be at least R, and no adaptive instance may have failed to reach
      the tol the fixed rule was asked for.  Skipped when R is omitted
      or the record predates the ``adaptive`` section.
-  5. **Zero-recompile gate** — with ``--max-warm-compiles N`` (CI
+  5. **Refinement gate** — with ``--min-refine-accuracy G``, the
+     iterative-refinement acceptance experiment must show an
+     unrefined/refined KKT-merit improvement of at least G, the
+     refined solve must reach the exact-path tolerance, and ZERO
+     additional cells may have been written across refinement rounds
+     (correction solves reuse the original programmed conductances).
+     Skipped when G is omitted.
+  6. **Zero-recompile gate** — with ``--max-warm-compiles N`` (CI
      passes 0), every warm batched pass must have compiled at most N
      fresh XLA executables.  A violation means an executable-cache key
      drifted (stale ``opts_static`` field, unstable bucket signature).
@@ -51,14 +60,15 @@ import json
 import math
 import sys
 
-SCHEMA = "bench_stream/v6"
+SCHEMA = "bench_stream/v7"
 
-# every serving path a v6 record must carry
+# every serving path a v7 record must carry
 REQUIRED_PATHS = (
     "exact_batched",
     "exact_per_instance",
     "crossbar_batched",
     "crossbar_per_instance",
+    "crossbar_refined",
     "sparse_batched",
     "sparse_batched_dense",
     "sparse_ell",
@@ -78,6 +88,10 @@ ADAPTIVE_FIELDS = ("iter_reduction_median", "iter_reduction_p10",
 NORM_REUSE_FIELDS = ("norm_seeded_buckets", "cache_entries",
                      "mvm_total_cold", "mvm_total_warm",
                      "max_rel_disagreement_vs_cold")
+REFINEMENT_FIELDS = ("merit_exact", "merit_unrefined", "merit_refined",
+                     "accuracy_gain", "cells_written_unrefined",
+                     "cells_written_refined", "write_cells_delta",
+                     "digital_mvms", "rounds", "sigma_read", "tol")
 SPARSE_FIELDS = ("density", "host_stack_bytes_dense",
                  "host_stack_bytes_sparse", "host_mem_improvement",
                  "speedup_warm", "speedup_warm_bcoo",
@@ -148,6 +162,15 @@ def validate_schema(bench: dict) -> None:
         if not _finite_number(reuse.get(field)):
             _fail(f"norm_reuse.{field} is not a finite number: "
                   f"{reuse.get(field)!r}")
+    refinement = bench.get("refinement")
+    if not isinstance(refinement, dict):
+        _fail("missing 'refinement' summary")
+    for field in REFINEMENT_FIELDS:
+        if not _finite_number(refinement.get(field)):
+            _fail(f"refinement.{field} is not a finite number: "
+                  f"{refinement.get(field)!r}")
+    if not isinstance(refinement.get("refined_reached_tol"), bool):
+        _fail("refinement.refined_reached_tol must be a bool")
     sparse = bench.get("sparse")
     if not isinstance(sparse, dict):
         _fail("missing 'sparse' summary")
@@ -247,6 +270,33 @@ def check_iter_reduction(candidate: dict, min_reduction: float) -> None:
               f"(>= {min_reduction}x required)")
 
 
+def check_refinement(candidate: dict, min_gain: float) -> None:
+    """Acceptance criterion of mixed-precision refinement: the refined
+    crossbar solve must reach the exact-path tolerance at a sigma_read
+    where the single solve fails, improve the KKT merit by at least
+    ``min_gain``x, and program ZERO additional cells across refinement
+    rounds (the same conductances serve every correction solve)."""
+    ref = candidate["refinement"]
+    gain = ref["accuracy_gain"]
+    reached = ref["refined_reached_tol"]
+    delta = ref["write_cells_delta"]
+    ok = gain >= min_gain and reached and delta == 0
+    print(f"bench_guard: refinement merit {ref['merit_unrefined']:.2e} -> "
+          f"{ref['merit_refined']:.2e} ({gain:.1e}x gain, "
+          f"{ref['rounds']} rounds), write cells delta {delta} "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if delta != 0:
+        _fail(f"refinement programmed {delta} additional cell(s) — the "
+              "correction solves must reuse the original conductances")
+    if not reached:
+        _fail(f"refined merit {ref['merit_refined']:.2e} missed the "
+              f"exact-path tol {ref['tol']:g} at sigma_read "
+              f"{ref['sigma_read']:g}")
+    if gain < min_gain:
+        _fail(f"refinement accuracy gain is only {gain:.2f}x "
+              f"(>= {min_gain}x required)")
+
+
 def check_warm_compiles(candidate: dict, max_compiles: int) -> None:
     """Zero-recompile gate: warm batched passes must stay compile-free."""
     san = candidate["sanitize"]
@@ -284,6 +334,11 @@ def main(argv=None) -> int:
                     help="min required median iteration reduction of "
                          "step_rule=adaptive over fixed on the "
                          "imbalanced stream (omit to skip)")
+    ap.add_argument("--min-refine-accuracy", type=float, default=None,
+                    help="min required unrefined/refined KKT-merit "
+                         "ratio of the iterative-refinement acceptance "
+                         "experiment; also enforces refined-reaches-tol "
+                         "and a zero write-cells delta (omit to skip)")
     args = ap.parse_args(argv)
 
     with open(args.candidate) as f:
@@ -297,6 +352,8 @@ def main(argv=None) -> int:
         check_warm_compiles(candidate, args.max_warm_compiles)
     if args.min_iter_reduction is not None:
         check_iter_reduction(candidate, args.min_iter_reduction)
+    if args.min_refine_accuracy is not None:
+        check_refinement(candidate, args.min_refine_accuracy)
 
     if args.baseline:
         with open(args.baseline) as f:

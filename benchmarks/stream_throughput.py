@@ -20,24 +20,27 @@ Each timed path runs twice: COLD includes compilation, WARM is the
 steady-state serving cost (the number that matters for throughput).
 ``--kernel`` selects the engine's update backend (jnp vs fused Pallas).
 Besides the full record, every run emits ``BENCH_stream.json`` at the
-repo root (schema ``bench_stream/v6``: per-path warm/cold seconds +
+repo root (schema ``bench_stream/v7``: per-path warm/cold seconds +
 device-MVM totals + per-instance ``iterations_to_tol`` distributions
 (median/p90) — including the three sparse backends (``sparse_ell``
 = the default row-blocked ELL pipeline, ``sparse_bcoo`` = nnz-bucketed
 COO, ``sparse_ell_mega`` = ELL with the fused multi-iteration
 megakernel), the async-vs-sync dispatch split, the per-pod ROUTED
 cluster path, the ``exact_adaptive`` step-rule path on a scale-
-imbalanced acceptance stream and the ``exact_norm_reuse`` seeded
-second pass — plus ``sparse``/``cluster`` summaries, an ``adaptive``
+imbalanced acceptance stream, the ``exact_norm_reuse`` seeded
+second pass and the ``crossbar_refined`` mixed-precision refinement
+solve — plus ``sparse``/``cluster`` summaries, an ``adaptive``
 summary with the fixed-vs-adaptive iteration-reduction statistics, a
-``norm_reuse`` summary, and a ``sanitize`` section recording the XLA
-compilation count of every warm batched pass) as the perf baseline for
-future PRs; CI uploads it and ``benchmarks/bench_guard.py`` gates
+``norm_reuse`` summary, a ``refinement`` acceptance summary (merit
+contrast, write-cells delta), and a ``sanitize`` section recording the
+XLA compilation count of every warm batched pass) as the perf baseline
+for future PRs; CI uploads it and ``benchmarks/bench_guard.py`` gates
 regressions against it, including the acceptance-criterion gates that
 the default sparse pipeline's warm serving is at least as fast as the
 densified baseline, that the adaptive rule's median iteration reduction
-stays above ``--min-iter-reduction``, and the zero-recompile gate
-(``--max-warm-compiles 0``) on the warm passes.
+stays above ``--min-iter-reduction``, that refinement's accuracy gain
+stays above ``--min-refine-accuracy`` with zero extra write cells, and
+the zero-recompile gate (``--max-warm-compiles 0``) on the warm passes.
 """
 from __future__ import annotations
 
@@ -451,6 +454,73 @@ def bench_adaptive(lps, opts):
     }
 
 
+def bench_refinement(opts, device):
+    """Mixed-precision iterative-refinement acceptance experiment: on an
+    instance where the exact path converges but the analog solve bottoms
+    out at the read-noise floor, the refined crossbar path (digital
+    residual outer loop re-solving the correction LP on the SAME
+    programmed conductances) must recover exact-path accuracy with ZERO
+    additional write cycles — ``bench_guard --min-refine-accuracy``
+    gates the unrefined/refined merit ratio and the write-cells delta.
+
+    The instance, iteration budget and ``sigma_read`` are fixed
+    (independent of ``--smoke``): this measures convergence behaviour,
+    not throughput, and the contrast needs a noise level where the
+    single solve demonstrably fails.
+    """
+    import dataclasses
+
+    import jax
+    from repro.core import solve_jit
+    from repro.crossbar import solve_crossbar_jit
+    from repro.lp import random_standard_lp
+
+    lp = random_standard_lp(16, 28, seed=3)
+    noisy = dataclasses.replace(device,
+                                sigma_read=max(device.sigma_read, 2e-3))
+    base = dataclasses.replace(opts, max_iters=8000, tol=1e-6,
+                               check_every=64, refine_rounds=0,
+                               refine_tol=0.0)
+    refined_opts = dataclasses.replace(base, refine_rounds=4,
+                                       refine_tol=base.tol)
+
+    exact = solve_jit(lp, base)
+    rep0 = solve_crossbar_jit(lp, base, device=noisy,
+                              key=jax.random.PRNGKey(base.seed))
+    t0 = time.perf_counter()
+    rep1 = block_until_ready(solve_crossbar_jit(
+        lp, refined_opts, device=noisy,
+        key=jax.random.PRNGKey(base.seed)))
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rep1 = block_until_ready(solve_crossbar_jit(
+        lp, refined_opts, device=noisy,
+        key=jax.random.PRNGKey(base.seed)))
+    warm_s = time.perf_counter() - t0
+
+    merit_ref = rep1.result.merit
+    return {
+        "cold_s": cold_s, "warm_s": warm_s,
+        "tol": base.tol, "rounds": refined_opts.refine_rounds,
+        "sigma_read": noisy.sigma_read,
+        "merit_exact": float(exact.merit),
+        "merit_unrefined": float(rep0.result.merit),
+        "merit_refined": float(merit_ref),
+        "accuracy_gain": float(rep0.result.merit / max(merit_ref, 1e-300)),
+        "status_unrefined": rep0.result.status,
+        "status_refined": rep1.result.status,
+        "refined_reached_tol": bool(merit_ref <= base.tol),
+        "cells_written_unrefined": int(rep0.ledger.cells_written),
+        "cells_written_refined": int(rep1.ledger.cells_written),
+        "write_cells_delta": int(rep1.ledger.cells_written
+                                 - rep0.ledger.cells_written),
+        "executed_iterations": int(rep1.executed_iterations),
+        "digital_mvms": int(rep1.digital_mvms),
+        "mvm_total": int(rep1.result.mvm_calls),
+        "mvm_total_unrefined": int(rep0.result.mvm_calls),
+    }
+
+
 def bench_norm_reuse(lps, opts):
     """Cross-instance norm reuse: pass 2 of the same stream is served by
     the seeded executables (short power refine instead of full Lanczos).
@@ -554,6 +624,7 @@ def main(argv=None):
         opts, max_iters=max(max_iters, 20000 if args.smoke else 40000))
     record["adaptive"] = bench_adaptive(imb_lps, adapt_opts)
     record["norm_reuse"] = bench_norm_reuse(lps, opts)
+    record["refinement"] = bench_refinement(opts, device)
 
     out = args.out or os.path.join(
         "experiments",
@@ -570,7 +641,7 @@ def main(argv=None):
     from repro.runtime import sanitize
 
     bench = {
-        "schema": "bench_stream/v6",
+        "schema": "bench_stream/v7",
         "kernel": args.kernel,
         "config": record["config"],
         # runtime-sanitizer surface: XLA compilations during each warm
@@ -653,6 +724,13 @@ def main(argv=None):
                 "warm_s": record["norm_reuse"]["warm_s"],
                 "mvm_total": record["norm_reuse"]["mvm_total_warm"],
             },
+            # v7: the iterative-refinement crossbar solve (acceptance
+            # instance; convergence details in the "refinement" section)
+            "crossbar_refined": {
+                "cold_s": record["refinement"]["cold_s"],
+                "warm_s": record["refinement"]["warm_s"],
+                "mvm_total": record["refinement"]["mvm_total"],
+            },
         },
         "cluster": {
             "n_pods": record["cluster"]["n_pods"],
@@ -689,6 +767,15 @@ def main(argv=None):
             "max_rel_disagreement_vs_cold":
                 record["norm_reuse"]["max_rel_disagreement_vs_cold"],
         },
+        # v7: the refinement acceptance summary bench_guard's
+        # --min-refine-accuracy gate reads — unrefined/refined merit
+        # ratio and the zero-additional-writes evidence
+        "refinement": {k: record["refinement"][k] for k in (
+            "merit_exact", "merit_unrefined", "merit_refined",
+            "accuracy_gain", "refined_reached_tol",
+            "cells_written_unrefined", "cells_written_refined",
+            "write_cells_delta", "digital_mvms", "rounds",
+            "sigma_read", "tol")},
         "sparse": {
             "density": record["sparse"]["density"],
             "host_stack_bytes_dense":
@@ -719,6 +806,12 @@ def main(argv=None):
         "exact_routed": record["cluster"]["iters_routed"],
         "exact_adaptive": record["adaptive"]["iters_adaptive"],
         "exact_norm_reuse": record["norm_reuse"]["iters_warm"],
+        # single acceptance instance: the distribution degenerates to
+        # the executed (bucket-max, all-rounds) iteration count
+        "crossbar_refined": {
+            "median": float(record["refinement"]["executed_iterations"]),
+            "p90": float(record["refinement"]["executed_iterations"]),
+        },
     }
     for name, st in iters_map.items():
         bench["paths"][name]["iterations_to_tol"] = st
@@ -776,6 +869,14 @@ def main(argv=None):
           f" | cache entries {r['cache_entries']}"
           f" | mvms {r['mvm_total_cold']} -> {r['mvm_total_warm']}"
           f" | warm compiles {r['warm_compiles']}")
+    r = record["refinement"]
+    print(f"[refinement] unrefined merit {r['merit_unrefined']:.2e}"
+          f" ({r['status_unrefined']})"
+          f" | refined merit {r['merit_refined']:.2e}"
+          f" ({r['status_refined']}, {r['rounds']} rounds)"
+          f" | gain {r['accuracy_gain']:.1e}x"
+          f" | write cells delta {r['write_cells_delta']}"
+          f" | digital mvms {r['digital_mvms']}")
     led = record["crossbar"]["ledger_batched"]
     print(f"[crossbar] stream write={led['write_energy_j']:.3f}J "
           f"(padding {led['write_energy_padding_j']:.3f}J) "

@@ -667,7 +667,7 @@ def pdhg_loop(op: Operator, upd: Updates, b, c, lb, ub, T, Sigma,
 # ----------------------------------------------------- jit core + ledger ---
 
 def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
-               operator: Optional[Operator] = None):
+               operator: Optional[Operator] = None, x0=None, y0=None):
     """The jitted solve core (formerly ``pdhg._solve_jit_core``).
 
     ``static`` is the hashable tuple from ``pdhg.opts_static``:
@@ -692,7 +692,14 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     operator), ``megakernel`` (fuse each check window into one launch;
     auto-mounted on the dense backend at ``sigma_read == 0``),
     ``step_rule`` (one of ``STEP_RULES``, default ``"fixed"`` — see
-    ``pdhg_loop``).
+    ``pdhg_loop``).  Entries 13/14 (``refine_rounds``/``refine_tol``)
+    belong to the digital refinement shell around this core
+    (``crossbar.refine``) and are ignored here.
+
+    ``x0``/``y0`` warm-start the loop (both or neither); by default the
+    paper's projected-Gaussian init is drawn from ``key``.  The
+    refinement shell passes zeros — the correction LP's origin IS the
+    previous outer iterate in shifted coordinates.
     """
     (max_iters, tol, eta, omega, gamma, check_every, restart_beta,
      sigma_read, kernel) = static[:9]
@@ -708,7 +715,8 @@ def solve_core(K_fwd, K_adj, b, c, lb, ub, T, Sigma, rho, key, static, *,
     rho = jnp.maximum(rho, jnp.asarray(1e-12, b.dtype))
     tau0 = eta / (omega * rho)
     sigma0 = eta * omega / rho
-    key, x0, y0 = draw_init(key, m, n, lb, ub, b.dtype)
+    if x0 is None:
+        key, x0, y0 = draw_init(key, m, n, lb, ub, b.dtype)
     if operator is None:
         if hasattr(K_fwd, "todense"):   # JAXSparse (BCOO/BCSR), not ndarray
             operator = sparse_operator(K_fwd, sigma_read)
@@ -782,3 +790,24 @@ def mvm_accounting(iterations: int, check_every: int,
     n_checks = max(1, iterations // max(1, check_every))
     return (lanczos_iters + MVMS_PER_ITERATION * iterations
             + mvms_per_check(restart) * n_checks)
+
+
+def refine_digital_mvms(refine_rounds: int) -> int:
+    """Exact (digital, full-precision) MVMs the iterative-refinement
+    shell (``crossbar.refine``) issues OUTSIDE the analog while loops:
+    one (Kx, K^Ty) baseline pair before the first round plus one
+    candidate-evaluation pair per round.  These run on the digital
+    co-processor against the exact operator — they are NOT analog reads
+    and are never charged to the crossbar read ledger; the traceaudit
+    budget analyzer uses this count to tell sanctioned digital residual
+    MVMs apart from unledgered analog reads leaking out of the loop."""
+    return 0 if refine_rounds <= 0 else 2 + 2 * refine_rounds
+
+
+def refine_window_factor(refine_rounds: int) -> int:
+    """Number of analog while-loop solves a refined path runs (the
+    original solve plus one correction solve per round) — each is a full
+    ``pdhg_loop`` whose windows charge ``mvm_window_budget`` MVMs.  The
+    traceaudit budget analyzer multiplies the per-window budget by this
+    when auditing refined paths."""
+    return 1 + max(0, refine_rounds)

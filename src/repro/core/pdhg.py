@@ -92,6 +92,19 @@ class PDHGOptions:
     #                                prep paths: "lanczos" (Algorithm 3) |
     #                                "power" (symmetric-block power
     #                                iteration; same MVM count/charge)
+    refine_rounds: int = 0         # digital iterative-refinement rounds
+    #                                around the crossbar solve
+    #                                (crossbar.refine): each round
+    #                                re-solves the residual-correction LP
+    #                                on the SAME programmed conductances
+    #                                (shifted b/c only — zero extra write
+    #                                cycles), recovering digital-grade
+    #                                accuracy from noisy analog reads
+    refine_tol: float = 0.0        # stop adopting corrections once the
+    #                                exact (digital) KKT merit is at or
+    #                                below this — avoids pumping read
+    #                                noise back into a converged iterate
+    #                                (0.0 = refine for all rounds)
 
 
 @dataclasses.dataclass
@@ -417,10 +430,18 @@ def opts_static(opts: PDHGOptions, sigma_read: float = 0.0) -> tuple:
                          f"set step_rule='strongly_convex' explicitly "
                          f"(got gamma={opts.gamma} with "
                          f"step_rule={opts.step_rule!r})")
+    if opts.refine_rounds < 0:
+        raise ValueError(f"refine_rounds must be >= 0 "
+                         f"(got {opts.refine_rounds})")
+    # refine_rounds/refine_tol ride in the static tuple (entries 13/14):
+    # the refinement shell unrolls one analog solve per round, so a
+    # different round count is a different trace and must never reuse an
+    # executable compiled for another.  solve_core itself ignores them.
     return (opts.max_iters, opts.tol, opts.eta, opts.omega, opts.gamma,
             opts.check_every, opts.restart_beta, float(sigma_read),
             opts.kernel, bool(opts.restart), opts.sparse_kernel,
-            bool(opts.megakernel), opts.step_rule)
+            bool(opts.megakernel), opts.step_rule,
+            int(opts.refine_rounds), float(opts.refine_tol))
 
 
 # Backwards-compatible alias: the dense jit core now lives in the engine.

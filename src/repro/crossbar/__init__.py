@@ -10,6 +10,7 @@ from .encode import (
 from .energy import Ledger
 from .array import CrossbarArray, analog_linear, crossbar_accel_factory
 from .gpu import RTX6000, GPUModel
+from .refine import refined_core, solve_crossbar_refined
 from .solver import (
     CrossbarBatchSolver,
     CrossbarSolveReport,
@@ -24,6 +25,6 @@ __all__ = [
     "write_verify_error",
     "Ledger", "CrossbarArray", "analog_linear", "crossbar_accel_factory",
     "RTX6000", "GPUModel", "CrossbarBatchSolver", "CrossbarSolveReport",
-    "make_crossbar_bucket_pipeline", "solve_crossbar_jit",
-    "solve_crossbar_stream",
+    "make_crossbar_bucket_pipeline", "refined_core", "solve_crossbar_jit",
+    "solve_crossbar_refined", "solve_crossbar_stream",
 ]

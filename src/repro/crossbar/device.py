@@ -46,6 +46,19 @@ class DeviceModel:
     # --- converters (None = ideal; set to int bits to model quantization)
     dac_bits: int | None = None
     adc_bits: int | None = None
+    # --- error correction / fault tolerance (arXiv 2508.13298) ----------
+    # ``ecc`` programs k physically distinct replicas of every
+    # differential pair on k parallel tile sets; reads decode the replica
+    # stack per cell (``ecc_decode``: "median" is robust to a minority of
+    # stuck replicas, "mean" averages programming noise down by sqrt(k)).
+    # Replicas 1..k-1 are ledgered under the ``*_ecc`` fields, and every
+    # replica cell draws read current on every MVM (k-fold read energy).
+    ecc: int = 1                     # replication factor (1 = off)
+    ecc_decode: str = "median"       # "median" | "mean"
+    stuck_rate: float = 0.0          # per-cell stuck-at fault probability
+    #                                  (half stuck-OFF g=0, half stuck-ON g=1)
+    drift: float = 0.0               # relative conductance decay mask
+    #                                  applied after programming (retention)
 
     @property
     def logical_rows(self) -> int:

@@ -26,6 +26,18 @@ Ledger entries split LOGICAL cells (the operator itself) from PADDING
 cells (programmed only because tiles/buckets are larger than the
 operator; all-zero targets, one RESET pulse each), so the overhead of
 device-tile-aligned bucketing is auditable per instance.
+
+ECC mode (``DeviceModel.ecc = k`` > 1, after arXiv 2508.13298): every
+differential pair is programmed onto k physically distinct replicas
+(independent programming error, independent stuck-at faults), and reads
+decode the replica stack per cell — ``"median"`` votes out a minority of
+stuck replicas, ``"mean"`` averages programming noise down by sqrt(k).
+Replicas live on parallel tile sets, so programming LATENCY is unchanged
+while write energy and read energy scale k-fold; replicas 1..k-1 are
+ledgered under the ``*_ecc`` fields exactly like the logical/padding
+split.  Stuck-at faults (``stuck_rate``) and retention drift (``drift``)
+are applied per replica inside ``encode_core`` so the decode quality is
+what the solver actually sees.
 """
 from __future__ import annotations
 
@@ -56,36 +68,100 @@ class EncodedMatrix:
 
     @property
     def active_cells(self) -> float:
-        return 2.0 * self.g_pos.shape[0] * self.g_pos.shape[1] * self.fill
+        # every ECC replica's cells draw read current on every MVM
+        return (2.0 * self.g_pos.shape[0] * self.g_pos.shape[1] * self.fill
+                * max(1, self.device.ecc))
 
 
 def _quantize(g: jnp.ndarray, levels: int) -> jnp.ndarray:
     return jnp.round(g * (levels - 1)) / (levels - 1)
 
 
+ECC_DECODES = ("median", "mean")
+
+
 def encode_core(W: jnp.ndarray, key: jax.Array, g_levels: int,
-                sigma_program: float) -> Tuple[jnp.ndarray, jnp.ndarray,
-                                               jnp.ndarray, jnp.ndarray]:
+                sigma_program: float, *, ecc: int = 1,
+                ecc_decode: str = "median", stuck_rate: float = 0.0,
+                drift: float = 0.0) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                             jnp.ndarray, jnp.ndarray]:
     """Pure differential-pair programming model (vmappable).
 
     ``W`` must already be padded to its physical array shape.  Returns
     ``(g_pos, g_neg, scale, nz)`` where ``scale`` and ``nz`` (number of
     nonzero-target differential pairs) are traced scalars — the caller
-    turns them into ledger entries.
+    turns them into ledger entries.  ``g_pos``/``g_neg`` are the DECODED
+    effective conductances: with ``ecc = k > 1`` each cell is programmed
+    onto k replicas (independent error/faults per replica) and reduced
+    per cell by ``ecc_decode``.
+
+    ``nz`` counts pairs whose QUANTIZED target is nonzero — a cell whose
+    ``|W|`` lands below half an LSB programs to zero conductance, takes a
+    single RESET pulse like any other zero target, and draws no read
+    current, so it must not be charged the write-verify pulse train nor
+    inflate ``fill``.  (Counting the pre-quantization target here was a
+    ledger bug.)  Stuck cells keep their pulse-train charge: write-verify
+    burns the full train failing to converge on a faulted cell.
     """
+    if ecc_decode not in ECC_DECODES:
+        raise ValueError(f"unknown ecc_decode {ecc_decode!r}; expected one "
+                         f"of {ECC_DECODES}")
+    if ecc < 1:
+        raise ValueError(f"ecc replication factor must be >= 1 (got {ecc})")
     raw = jnp.max(jnp.abs(W))
     scale = jnp.where(raw > 0, raw, 1.0)
     g_pos_t = jnp.maximum(W, 0.0) / scale
     g_neg_t = jnp.maximum(-W, 0.0) / scale
     g_pos_q = _quantize(g_pos_t, g_levels)
     g_neg_q = _quantize(g_neg_t, g_levels)
-    k1, k2 = jax.random.split(key)
-    # residual programming error (relative, only on nonzero cells)
-    e1 = 1.0 + sigma_program * jax.random.normal(k1, g_pos_q.shape, W.dtype)
-    e2 = 1.0 + sigma_program * jax.random.normal(k2, g_neg_q.shape, W.dtype)
-    g_pos = jnp.clip(g_pos_q * e1, 0.0, 1.0)
-    g_neg = jnp.clip(g_neg_q * e2, 0.0, 1.0)
-    nz = jnp.sum((g_pos_t > 0) | (g_neg_t > 0))
+    nz = jnp.sum((g_pos_q > 0) | (g_neg_q > 0))
+
+    def _program(k):
+        """One physical replica: residual write-verify error, then the
+        fault masks (stuck-at replaces the programmed value; drift decays
+        whatever is actually stored, faulted or not)."""
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        e1 = 1.0 + sigma_program * jax.random.normal(k1, g_pos_q.shape,
+                                                     W.dtype)
+        e2 = 1.0 + sigma_program * jax.random.normal(k2, g_neg_q.shape,
+                                                     W.dtype)
+        gp = jnp.clip(g_pos_q * e1, 0.0, 1.0)
+        gn = jnp.clip(g_neg_q * e2, 0.0, 1.0)
+        if stuck_rate > 0.0:
+            for g, kk in ((0, k3), (1, k4)):
+                ka, kb = jax.random.split(kk)
+                mask = jax.random.bernoulli(ka, stuck_rate, g_pos_q.shape)
+                on = jax.random.bernoulli(kb, 0.5, g_pos_q.shape)
+                stuck = jnp.where(on, jnp.asarray(1.0, W.dtype),
+                                  jnp.asarray(0.0, W.dtype))
+                if g == 0:
+                    gp = jnp.where(mask, stuck, gp)
+                else:
+                    gn = jnp.where(mask, stuck, gn)
+        if drift > 0.0:
+            gp = gp * (1.0 - drift)
+            gn = gn * (1.0 - drift)
+        return gp, gn
+
+    if ecc == 1 and stuck_rate == 0.0 and drift == 0.0:
+        # fault-free single-copy path: keep the historical key schedule
+        # so pre-ECC traces stay bitwise identical
+        k1, k2 = jax.random.split(key)
+        e1 = 1.0 + sigma_program * jax.random.normal(k1, g_pos_q.shape,
+                                                     W.dtype)
+        e2 = 1.0 + sigma_program * jax.random.normal(k2, g_neg_q.shape,
+                                                     W.dtype)
+        g_pos = jnp.clip(g_pos_q * e1, 0.0, 1.0)
+        g_neg = jnp.clip(g_neg_q * e2, 0.0, 1.0)
+    elif ecc == 1:
+        g_pos, g_neg = _program(key)
+    else:
+        gps, gns = jax.vmap(_program)(jax.random.split(key, ecc))
+        if ecc_decode == "mean":
+            g_pos, g_neg = jnp.mean(gps, axis=0), jnp.mean(gns, axis=0)
+        else:
+            g_pos, g_neg = (jnp.median(gps, axis=0),
+                            jnp.median(gns, axis=0))
     return g_pos, g_neg, scale, nz
 
 
@@ -97,28 +173,38 @@ def charge_write(ledger: Ledger, device: DeviceModel, nz: float,
     (2 cells each); zero-target pairs take one RESET pulse per cell.
     Pairs outside the logical region (tile/bucket padding — always
     zero-target) are additionally ledgered under the ``*_padding``
-    fields.  Returns the fill fraction (for read-energy accounting).
-    Vectorization-friendly: callers may pass numpy scalars extracted from
-    a batched encode.
+    fields.  With ``device.ecc = k > 1`` the whole array (padding
+    included) is programmed k times; replicas 1..k-1 are additionally
+    ledgered under the ``*_ecc`` fields.  Returns the fill fraction (for
+    read-energy accounting).  Vectorization-friendly: callers may pass
+    numpy scalars extracted from a batched encode.
     """
     nz = float(nz)
+    replicas = max(1, device.ecc)
     tr, tc = device.crossbar_rows, device.crossbar_cols
     fill = nz / pairs_total
     pulses_logical = (nz * 2 * device.avg_write_pulses
                       + (2 * pairs_logical - 2 * nz) * 1.0)
     pulses_padding = 2.0 * (pairs_total - pairs_logical)
-    ledger.write_energy_j += ((pulses_logical + pulses_padding)
+    pulses_one = pulses_logical + pulses_padding
+    ledger.write_energy_j += (replicas * pulses_one
                               * device.write_pulse_energy_j)
     ledger.write_energy_padding_j += (pulses_padding
                                       * device.write_pulse_energy_j)
-    # tiles program in parallel; within a tile, cells are row-serial
+    ledger.write_energy_ecc_j += ((replicas - 1) * pulses_one
+                                  * device.write_pulse_energy_j)
+    # tiles program in parallel (ECC replicas are parallel tile sets, so
+    # latency is ecc-independent); within a tile, cells are row-serial:
+    # nonzero-target cells take the full write-verify train, zero-target
+    # cells one RESET pulse each — the RESET pulses are part of the
+    # serial train, so latency and energy agree on what was programmed
     cells_per_tile = tr * tc * 2
-    ledger.write_latency_s += (
-        cells_per_tile * max(fill, 1.0 / (tr * tc))
-        * device.avg_write_pulses * device.write_pulse_latency_s
-    )
-    ledger.cells_written += 2 * pairs_total
+    pulses_serial = cells_per_tile * (
+        fill * device.avg_write_pulses + (1.0 - fill) * 1.0)
+    ledger.write_latency_s += pulses_serial * device.write_pulse_latency_s
+    ledger.cells_written += replicas * 2 * pairs_total
     ledger.cells_written_padding += 2 * (pairs_total - pairs_logical)
+    ledger.cells_written_ecc += (replicas - 1) * 2 * pairs_total
     return fill
 
 
@@ -141,7 +227,9 @@ def encode_matrix(
         R, C = rows, cols
         Wp = W
     g_pos, g_neg, scale, nz = encode_core(
-        Wp, key, device.g_levels, device.sigma_program)
+        Wp, key, device.g_levels, device.sigma_program,
+        ecc=device.ecc, ecc_decode=device.ecc_decode,
+        stuck_rate=device.stuck_rate, drift=device.drift)
     nz = float(nz)
     fill = nz / (R * C)
     if ledger is not None:

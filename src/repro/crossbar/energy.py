@@ -22,6 +22,11 @@ class Ledger:
     # all-zero targets).  Already included in ``write_energy_j``; tracked
     # separately so bucketing overhead is auditable.
     write_energy_padding_j: float = 0.0
+    # ECC share of the WRITE phase (replicas 1..k-1 of a k-fold
+    # differential-pair replication, ``DeviceModel.ecc``).  Included in
+    # ``write_energy_j``/``cells_written`` like padding is, and tracked
+    # separately so redundancy overhead is auditable per instance.
+    write_energy_ecc_j: float = 0.0
     # GPU phases
     h2d_energy_j: float = 0.0
     h2d_latency_s: float = 0.0
@@ -33,10 +38,12 @@ class Ledger:
     mvm_count: int = 0
     cells_written: int = 0
     cells_written_padding: int = 0
+    cells_written_ecc: int = 0
 
     @property
     def write_energy_logical_j(self) -> float:
-        return self.write_energy_j - self.write_energy_padding_j
+        return (self.write_energy_j - self.write_energy_padding_j
+                - self.write_energy_ecc_j)
 
     @property
     def total_energy_j(self) -> float:

@@ -53,6 +53,18 @@ class CrossbarSolveReport:
     device: DeviceModel
     lanczos_mvms: int
     pdhg_mvms: int
+    # iterations the hardware actually EXECUTED (and the ledger charged).
+    # On the batched path a vmapped while_loop runs every lane until the
+    # slowest lane's check window completes, so an early-converged
+    # instance executes (and pays for) more windows than
+    # ``result.iterations`` reports; on single-instance paths the two
+    # coincide.  With refinement this sums the executed windows of every
+    # round.
+    executed_iterations: int = 0
+    # exact full-precision residual MVMs issued by the digital refinement
+    # shell (``engine.refine_digital_mvms``) — digital co-processor work,
+    # deliberately NOT charged to the analog read ledger
+    digital_mvms: int = 0
 
 
 def _charge_reads(ledger: Ledger, device: DeviceModel, n_mvms: int,
@@ -70,6 +82,12 @@ def solve_crossbar_jit(
     key: Optional[jax.Array] = None,
     ledger: Optional[Ledger] = None,
 ) -> CrossbarSolveReport:
+    if opts.refine_rounds > 0:
+        # digital iterative-refinement shell: same encode-once contract,
+        # extra analog read windows per round, zero extra writes
+        from . import refine as refine_mod
+        return refine_mod.solve_crossbar_refined(lp, opts, device, key,
+                                                 ledger)
     if key is None:
         key = jax.random.PRNGKey(opts.seed)
     ledger = ledger if ledger is not None else Ledger()
@@ -96,6 +114,7 @@ def solve_crossbar_jit(
     return CrossbarSolveReport(
         result=result, ledger=ledger, device=device,
         lanczos_mvms=lanczos_mvms, pdhg_mvms=pdhg_mvms,
+        executed_iterations=result.iterations,
     )
 
 
@@ -122,10 +141,21 @@ def make_crossbar_bucket_pipeline(opts: PDHGOptions, device: DeviceModel):
     dense operator; ``"pallas"`` keeps the conductance pair ON DEVICE and
     issues every solve MVM through the tiled differential-pair kernel
     (``engine.crossbar_operator`` -> ``kernels.ops.crossbar_mvm``) with
-    the fused update kernels.  Returns unscaled (xs, ys, iterations,
+    the fused update kernels.  Returns unscaled (xs, ys, its,
     merits, rhos, nz) — ``nz`` is the per-instance count of programmed
-    differential pairs feeding the vectorized write ledger.
+    differential pairs feeding the vectorized write ledger, and ``its``
+    is the per-round iteration-count vector (length
+    ``opts.refine_rounds + 1``; one entry per analog solve).
+
+    With ``opts.refine_rounds > 0`` each lane runs the digital
+    iterative-refinement shell (``crossbar.refine.refined_core``) around
+    the same encode: the programmed conductance stack is reused by every
+    round (zero extra writes), the exact scaled K feeds the digital
+    residual MVMs, and the analog correction solves ride the same
+    operator backend selection.
     """
+    from .refine import refined_core   # deferred: refine imports solver
+
     static = opts_static(opts, device.sigma_read)
 
     def one(K, b, c, lb, ub, key):
@@ -137,7 +167,9 @@ def make_crossbar_bucket_pipeline(opts: PDHGOptions, device: DeviceModel):
         R, C = _array_dims(m, n, device)
         Mp = jnp.zeros((R, C), M.dtype).at[:m + n, :m + n].set(M)
         g_pos, g_neg, scale, nz = encode_core(
-            Mp, enc_key, device.g_levels, device.sigma_program)
+            Mp, enc_key, device.g_levels, device.sigma_program,
+            ecc=device.ecc, ecc_decode=device.ecc_decode,
+            stuck_rate=device.stuck_rate, drift=device.drift)
         M_prog = (g_pos - g_neg) * scale
         K_fwd = M_prog[:m, m:m + n]
         K_adj = M_prog[m:m + n, :m]
@@ -154,10 +186,16 @@ def make_crossbar_bucket_pipeline(opts: PDHGOptions, device: DeviceModel):
         op = (engine.crossbar_operator(g_pos, g_neg, scale, m, n,
                                        sigma_read=device.sigma_read)
               if opts.kernel == "pallas" else None)   # None -> dense decode
-        x, y, it, merit = engine.solve_core(
-            K_fwd, K_adj, bs, cs, lbs, ubs, T, Sigma, rho, solve_key,
-            static, operator=op)
-        return D2 * x, D1 * y, it, merit, rho, nz
+        if opts.refine_rounds > 0:
+            x, y, its, merit = refined_core(
+                Ks, Ks.T, K_fwd, K_adj, bs, cs, lbs, ubs, T, Sigma, rho,
+                solve_key, static, operator=op)
+        else:
+            x, y, it, merit = engine.solve_core(
+                K_fwd, K_adj, bs, cs, lbs, ubs, T, Sigma, rho, solve_key,
+                static, operator=op)
+            its = jnp.reshape(it, (1,))
+        return D2 * x, D1 * y, its, merit, rho, nz
 
     def pipeline(Ks, bs, cs, lbs, ubs, keys):
         return jax.vmap(one)(Ks, bs, cs, lbs, ubs, keys)
@@ -207,20 +245,33 @@ class CrossbarBatchSolver(BatchSolver):
         pairs_total = R * C                # tile-padded physical array
         lanczos_mvms = (0 if self.opts.norm_override is not None
                         else self.opts.lanczos_iters)
+        # The vmapped while_loop physically executes EVERY lane (filler
+        # lanes included) until the slowest lane's check window
+        # completes, so the hardware runs — and the ledger must charge —
+        # the bucket-max iteration count per analog solve, not each
+        # instance's own early-exit count.  ``its`` is (B, rounds + 1):
+        # one column per refinement round's analog solve; iteration
+        # counts advance by ``check_every`` per window, so the column max
+        # is already window-quantized.
+        executed = its.max(axis=0)                  # per-round, all lanes
+        executed_total = int(executed.sum())
+        pdhg_mvms = int(sum(
+            engine.mvm_accounting(int(e), self.opts.check_every, 0,
+                                  restart=self.opts.restart)
+            for e in executed))
+        digital_mvms = engine.refine_digital_mvms(self.opts.refine_rounds)
         for k, i in enumerate(idxs):
             lp = lps[i]
             m, n = lp.K.shape
             x, y = xs[k, :n], ys[k, :m]
-            it = int(its[k])
+            it = int(its[k].sum())
             merit = float(merits[k])
             ledger = Ledger()
             fill = charge_write(ledger, self.device, float(nzs[k]),
                                 pairs_logical=(m + n) ** 2,
                                 pairs_total=pairs_total)
-            pdhg_mvms = engine.mvm_accounting(
-                it, self.opts.check_every, 0,
-                restart=self.opts.restart)
-            active_cells = 2.0 * pairs_total * fill
+            active_cells = (2.0 * pairs_total * fill
+                            * max(1, self.device.ecc))
             _charge_reads(ledger, self.device, lanczos_mvms + pdhg_mvms,
                           active_cells)
             res = kkt_residuals(
@@ -245,6 +296,8 @@ class CrossbarBatchSolver(BatchSolver):
             results[i] = CrossbarSolveReport(
                 result=result, ledger=ledger, device=self.device,
                 lanczos_mvms=lanczos_mvms, pdhg_mvms=pdhg_mvms,
+                executed_iterations=executed_total,
+                digital_mvms=digital_mvms,
             )
 
 

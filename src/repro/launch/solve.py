@@ -125,10 +125,38 @@ def main(argv=None):
                          "(shape bucket, sparsity fingerprint) — repeat "
                          "instances pay a short power-iteration refine "
                          "instead of the full Lanczos run")
+    ap.add_argument("--refine-rounds", type=int, default=0,
+                    help="crossbar backends only: digital iterative-"
+                         "refinement rounds — each re-solves the "
+                         "residual-correction LP on the SAME programmed "
+                         "conductances (shifted b/c, zero extra write "
+                         "cycles), recovering exact-path accuracy from "
+                         "noisy analog reads")
+    ap.add_argument("--refine-tol", type=float, default=0.0,
+                    help="stop adopting refinement corrections once the "
+                         "exact digital KKT merit reaches this "
+                         "(default 0 = refine for all rounds)")
+    ap.add_argument("--ecc", type=int, default=1,
+                    help="crossbar backends only: k-fold differential-"
+                         "pair replication with median decode — tolerates "
+                         "stuck cells/drift at k-fold write+read energy, "
+                         "ledgered separately under the *_ecc fields")
     ap.add_argument("--tol", type=float, default=1e-6)
     ap.add_argument("--max-iters", type=int, default=40000)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    crossbar_backend = (args.backend in ("epiram", "taox")
+                        or (args.backend == "batch"
+                            and args.device != "none"))
+    if (args.refine_rounds or args.refine_tol or args.ecc != 1) \
+            and not crossbar_backend:
+        ap.error("--refine-rounds/--refine-tol/--ecc only apply to the "
+                 "crossbar backends (--backend epiram/taox or "
+                 "--backend batch --device ...): refinement re-reads the "
+                 "programmed array and ECC replicates its cells — exact "
+                 "digital paths have neither")
+    if args.ecc < 1:
+        ap.error("--ecc must be >= 1 (1 = replication off)")
     if args.device != "none" and args.backend != "batch":
         ap.error("--device only applies to --backend batch "
                  "(use --backend epiram/taox for single instances)")
@@ -157,7 +185,16 @@ def main(argv=None):
     opts = PDHGOptions(max_iters=args.max_iters, tol=args.tol,
                        check_every=100, seed=args.seed,
                        kernel=args.kernel, step_rule=args.step_rule,
-                       gamma=args.gamma, norm_backend=args.norm_backend)
+                       gamma=args.gamma, norm_backend=args.norm_backend,
+                       refine_rounds=args.refine_rounds,
+                       refine_tol=args.refine_tol)
+
+    def crossbar_device(name: str):
+        import dataclasses as _dc
+        dev = EPIRAM if name == "epiram" else TAOX_HFOX
+        if args.ecc != 1:
+            dev = _dc.replace(dev, ecc=args.ecc)
+        return dev
     if args.norm_reuse and (args.backend != "batch"
                             or args.device != "none"):
         ap.error("--norm-reuse only applies to --backend batch without "
@@ -169,7 +206,7 @@ def main(argv=None):
         lps = [load_instance(s.strip(), seed=args.seed + i)
                for i, s in enumerate(specs)]
         if args.device != "none":
-            dev = EPIRAM if args.device == "epiram" else TAOX_HFOX
+            dev = crossbar_device(args.device)
             reports = solve_crossbar_stream(lps, opts, device=dev)
             for lp, rep in zip(lps, reports):
                 r, led = rep.result, rep.ledger
@@ -182,8 +219,14 @@ def main(argv=None):
                     line += (f" (known optimum {lp.obj_opt:.6f}, "
                              f"rel err {rel:.2e})")
                 line += (f" | write={led.write_energy_j:.4f}J "
-                         f"(padding {led.write_energy_padding_j:.4f}J) "
-                         f"read={led.read_energy_j:.4f}J")
+                         f"(padding {led.write_energy_padding_j:.4f}J"
+                         + (f", ecc {led.write_energy_ecc_j:.4f}J"
+                            if dev.ecc > 1 else "")
+                         + f") read={led.read_energy_j:.4f}J")
+                if args.refine_rounds:
+                    line += (f" | refine: rounds={args.refine_rounds} "
+                             f"executed_iters={rep.executed_iterations} "
+                             f"digital_mvms={rep.digital_mvms}")
                 print(line)
             return reports
         if args.sparse:
@@ -226,9 +269,19 @@ def main(argv=None):
         res = solve_jit(lp, opts)
         led = None
     elif args.backend in ("epiram", "taox"):
-        dev = EPIRAM if args.backend == "epiram" else TAOX_HFOX
+        dev = crossbar_device(args.backend)
         rep = solve_crossbar_jit(lp, opts, device=dev)
         res, led = rep.result, rep.ledger
+        if args.refine_rounds:
+            print(f"refine: rounds={args.refine_rounds} "
+                  f"executed_iters={rep.executed_iterations} "
+                  f"digital_mvms={rep.digital_mvms} "
+                  f"cells_written={led.cells_written} (all pre-refinement; "
+                  f"rounds add READ windows only)")
+        if dev.ecc > 1:
+            print(f"ecc: k={dev.ecc} decode={dev.ecc_decode} "
+                  f"write_ecc={led.write_energy_ecc_j:.4f}J "
+                  f"cells_ecc={led.cells_written_ecc}")
     else:
         if args.cluster != "off":
             # shard_map over the process-spanning global mesh

@@ -10,6 +10,7 @@ from repro.crossbar import (
     CrossbarArray,
     Ledger,
     analog_linear,
+    charge_write,
     encode_matrix,
     solve_crossbar_jit,
     write_verify_error,
@@ -99,6 +100,60 @@ def test_encode_core_vmaps_over_a_stacked_operator_batch():
             / np.abs(np.asarray(Ws[i])).max()
         assert err < 1.5 / EPIRAM.g_levels + 6 * EPIRAM.sigma_program
         assert 0 < int(nzs[i]) <= 64 * 64
+
+
+def test_encode_nz_counts_post_quantization_targets():
+    """Regression: entries below half an LSB quantize to zero conductance
+    — they take one RESET pulse and draw no read current, so they must
+    not count as nonzero-target pairs (the pre-quantization count
+    inflated both the write-pulse charge and the read-current fill)."""
+    from repro.crossbar import encode_core
+
+    W = np.zeros((16, 16))
+    W[0, 0] = 1.0                      # sets the scale
+    W[1:5, 1:5] = 1e-6                 # << LSB at 1.0 scale: quantize to 0
+    g_pos, g_neg, scale, nz = encode_core(
+        jnp.asarray(W), jax.random.PRNGKey(0), EPIRAM.g_levels,
+        EPIRAM.sigma_program)
+    assert int(nz) == 1
+    # the sub-LSB cells really are zero conductance (no read current)
+    dec = np.asarray((g_pos - g_neg) * scale)
+    assert np.all(dec[1:5, 1:5] == 0.0)
+
+    # and the ledger sees the honest fill: one pulse train, RESET for
+    # the rest
+    led = Ledger()
+    fill = charge_write(led, EPIRAM, float(nz), pairs_logical=16 * 16,
+                        pairs_total=16 * 16)
+    assert fill == 1 / 256
+    expected_pulses = (1 * 2 * EPIRAM.avg_write_pulses
+                       + (2 * 256 - 2) * 1.0)
+    np.testing.assert_allclose(
+        led.write_energy_j, expected_pulses * EPIRAM.write_pulse_energy_j)
+
+
+def test_write_latency_includes_reset_pulses():
+    """Regression: zero-target cells take a real RESET pulse through the
+    same row-serial programming path — the latency model must charge it
+    like the energy model always did, not floor it away."""
+    led = Ledger()
+    tr, tc = EPIRAM.crossbar_rows, EPIRAM.crossbar_cols
+    pairs = tr * tc
+    nz = pairs // 4                    # quarter-full array
+    fill = charge_write(led, EPIRAM, float(nz), pairs_logical=pairs,
+                        pairs_total=pairs)
+    pulses_serial = 2 * tr * tc * (fill * EPIRAM.avg_write_pulses
+                                   + (1.0 - fill) * 1.0)
+    np.testing.assert_allclose(
+        led.write_latency_s, pulses_serial * EPIRAM.write_pulse_latency_s)
+    # a RESET-only (empty) array still takes one pulse per cell, not
+    # zero time
+    led0 = Ledger()
+    charge_write(led0, EPIRAM, 0.0, pairs_logical=pairs, pairs_total=pairs)
+    np.testing.assert_allclose(
+        led0.write_latency_s,
+        2 * tr * tc * EPIRAM.write_pulse_latency_s)
+    assert led0.write_latency_s < led.write_latency_s
 
 
 def test_taox_writes_cheaper_than_epiram():

@@ -1,0 +1,231 @@
+"""Mixed-precision iterative refinement + ECC-aware encoding.
+
+The tentpole contract: a crossbar solve whose single pass bottoms out at
+the read-noise floor must reach the EXACT path's KKT tolerance through
+digital-outer/analog-inner refinement — with zero additional write
+cycles (every correction LP re-solves on the same programmed
+conductances), every inner analog window charged to the read ledger,
+and the digital residual MVMs counted but never charged as reads.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PDHGOptions
+from repro.core import engine
+from repro.crossbar import (
+    EPIRAM,
+    TAOX_HFOX,
+    CrossbarBatchSolver,
+    encode_core,
+    encode_matrix,
+    Ledger,
+    solve_crossbar_jit,
+)
+from repro.lp import random_standard_lp
+
+
+# the acceptance instance: the exact path converges well inside the
+# per-round iteration budget (refinement's per-round contraction is
+# limited by inner-solve convergence, so the contrast needs an instance
+# the budget can actually solve)
+ACCEPT_OPTS = PDHGOptions(max_iters=8000, tol=1e-6, check_every=64)
+ACCEPT_SIGMA = 2e-3
+
+
+def _acceptance_reports():
+    from repro.core import solve_jit
+
+    lp = random_standard_lp(16, 28, seed=3)
+    noisy = dataclasses.replace(EPIRAM, sigma_read=ACCEPT_SIGMA)
+    exact = solve_jit(lp, ACCEPT_OPTS)
+    plain = solve_crossbar_jit(lp, ACCEPT_OPTS, device=noisy,
+                               key=jax.random.PRNGKey(0))
+    refined_opts = dataclasses.replace(ACCEPT_OPTS, refine_rounds=4,
+                                       refine_tol=ACCEPT_OPTS.tol)
+    refined = solve_crossbar_jit(lp, refined_opts, device=noisy,
+                                 key=jax.random.PRNGKey(0))
+    return exact, plain, refined
+
+
+@pytest.fixture(scope="module")
+def acceptance():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield _acceptance_reports()
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
+def test_refinement_reaches_exact_tol_where_single_solve_fails(acceptance):
+    exact, plain, refined = acceptance
+    assert exact.status == "optimal"
+    # the single analog pass is pinned at the read-noise floor, orders of
+    # magnitude above tol
+    assert plain.result.status == "iteration_limit"
+    assert plain.result.merit > 100 * ACCEPT_OPTS.tol
+    # refinement recovers the exact path's accuracy on the same device
+    assert refined.result.status == "optimal"
+    assert refined.result.merit <= ACCEPT_OPTS.tol
+
+
+def test_refinement_writes_nothing_after_the_initial_encode(acceptance):
+    _, plain, refined = acceptance
+    # zero additional write cycles across all refinement rounds: the
+    # correction solves reuse the originally programmed conductances
+    assert refined.ledger.cells_written == plain.ledger.cells_written
+    assert refined.ledger.write_energy_j == plain.ledger.write_energy_j
+    assert refined.ledger.write_latency_s == plain.ledger.write_latency_s
+
+
+def test_refinement_ledgers_every_analog_round_as_reads(acceptance):
+    _, plain, refined = acceptance
+    # every inner solve's windows are charged: strictly more read MVMs
+    # than the single pass, and the ledger total is exactly the
+    # norm-estimation plus PDHG charge (nothing silent in either
+    # direction)
+    assert refined.pdhg_mvms > plain.pdhg_mvms
+    assert refined.ledger.mvm_count == (refined.lanczos_mvms
+                                        + refined.pdhg_mvms)
+    assert refined.ledger.read_energy_j > plain.ledger.read_energy_j
+    # digital residual/candidate MVMs are counted but are NOT analog
+    # reads — they never inflate the read ledger
+    assert refined.digital_mvms == engine.refine_digital_mvms(4) == 10
+    assert plain.digital_mvms == 0
+    assert refined.executed_iterations == refined.result.iterations
+
+
+def test_refined_core_rounds_zero_matches_solve_core(x64):
+    from repro.core.pdhg import opts_static
+    from repro.crossbar.refine import refined_core
+
+    lp = random_standard_lp(8, 14, seed=0)
+    from repro.core import pdhg as pdhg_mod
+
+    opts = PDHGOptions(max_iters=256, tol=1e-6, check_every=32)
+    scaled, T, Sigma = pdhg_mod.prepare(lp, opts)
+    K = scaled.K
+    rho = jnp.asarray(2.0, K.dtype)
+    key = jax.random.PRNGKey(7)
+    static = opts_static(opts)
+    x0, y0, it0, m0 = engine.solve_core(
+        K, K.T, scaled.b, scaled.c, scaled.lb, scaled.ub, T, Sigma, rho,
+        key, static)
+    x1, y1, its, m1 = refined_core(
+        K, K.T, K, K.T, scaled.b, scaled.c, scaled.lb, scaled.ub, T,
+        Sigma, rho, key, static)
+    np.testing.assert_array_equal(np.asarray(x0), np.asarray(x1))
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    assert its.shape == (1,) and int(its[0]) == int(it0)
+    assert float(m0) == float(m1)
+
+
+def test_batch_solver_charges_executed_windows_not_own_iterations(x64):
+    """The vmapped while_loop runs every lane until the slowest lane's
+    window completes — the ledger must charge the EXECUTED (bucket-max,
+    window-quantized) count, identically for every instance in the
+    bucket, never the per-instance early-exit count."""
+    opts = PDHGOptions(max_iters=2000, tol=1e-4, check_every=50)
+    lps = [random_standard_lp(8, 14, seed=s) for s in range(3)]
+    solver = CrossbarBatchSolver(opts, device=TAOX_HFOX)
+    reports = solver.solve_stream(lps)
+    assert len(reports) == 3
+    executed = {rep.executed_iterations for rep in reports}
+    assert len(executed) == 1                    # one bucket, one charge
+    exe = executed.pop()
+    its = [rep.result.iterations for rep in reports]
+    assert exe == max(its)
+    assert exe % opts.check_every == 0           # window-quantized
+    assert any(it < exe for it in its) or len(set(its)) == 1
+    charges = {rep.pdhg_mvms for rep in reports}
+    assert charges == {engine.mvm_accounting(exe, opts.check_every, 0,
+                                             restart=opts.restart)}
+
+
+def test_batch_solver_refined_rounds_and_executed_accounting(x64):
+    opts = PDHGOptions(max_iters=512, tol=1e-7, check_every=64,
+                       refine_rounds=2, refine_tol=1e-7)
+    lps = [random_standard_lp(8, 14, seed=s) for s in (0, 1)]
+    solver = CrossbarBatchSolver(opts, device=TAOX_HFOX)
+    reports = solver.solve_stream(lps)
+    for rep in reports:
+        # all three analog solves (1 + 2 rounds) are in the executed
+        # count and therefore in the read charge
+        assert rep.executed_iterations >= rep.result.iterations
+        assert rep.digital_mvms == engine.refine_digital_mvms(2) == 6
+        assert rep.pdhg_mvms >= 3 * engine.mvm_accounting(
+            opts.check_every, opts.check_every, 0, restart=opts.restart)
+        assert rep.ledger.mvm_count == rep.lanczos_mvms + rep.pdhg_mvms
+
+
+def test_ecc_median_decode_recovers_from_stuck_cells():
+    rng = np.random.default_rng(11)
+    W = rng.normal(size=(64, 64))
+    scale = np.abs(W).max()
+    key = jax.random.PRNGKey(3)
+
+    def mean_err(ecc):
+        gp, gn, s, _ = encode_core(
+            jnp.asarray(W), key, EPIRAM.g_levels, EPIRAM.sigma_program,
+            ecc=ecc, ecc_decode="median", stuck_rate=0.03)
+        dec = np.asarray((gp - gn) * s)
+        return np.abs(dec - W).mean() / scale
+
+    # 3% stuck cells wreck the single copy on average; 3-way median
+    # voting needs >= 2 of 3 replicas faulted on the SAME cell to fail
+    assert mean_err(3) < mean_err(1) / 3
+
+
+def test_ecc_mean_decode_averages_programming_noise():
+    rng = np.random.default_rng(12)
+    W = rng.normal(size=(64, 64))
+    key = jax.random.PRNGKey(4)
+
+    def err(ecc):
+        gp, gn, s, _ = encode_core(
+            jnp.asarray(W), key, EPIRAM.g_levels, EPIRAM.sigma_program,
+            ecc=ecc, ecc_decode="mean", stuck_rate=0.0, drift=0.0)
+        dec = np.asarray((gp - gn) * s)
+        # subtract the (shared) quantization part by comparing to the
+        # ecc-free quantized target via a noiseless encode
+        return np.abs(dec - W).mean()
+
+    assert err(4) < err(1)
+
+
+def test_ecc_ledger_overhead_is_split_and_latency_free(x64):
+    rng = np.random.default_rng(13)
+    W = rng.normal(size=(64, 64))
+    led1, led3 = Ledger(), Ledger()
+    dev3 = dataclasses.replace(EPIRAM, ecc=3)
+    enc1 = encode_matrix(W, EPIRAM, jax.random.PRNGKey(0), ledger=led1)
+    enc3 = encode_matrix(W, dev3, jax.random.PRNGKey(0), ledger=led3)
+    # write energy and cells scale k-fold; replicas 1..k-1 are ledgered
+    # separately, exactly like the logical/padding split
+    np.testing.assert_allclose(led3.write_energy_j,
+                               3 * led1.write_energy_j)
+    np.testing.assert_allclose(led3.write_energy_ecc_j,
+                               2 * led1.write_energy_j)
+    assert led3.cells_written == 3 * led1.cells_written
+    assert led3.cells_written_ecc == 2 * led1.cells_written
+    assert led1.cells_written_ecc == 0 and led1.write_energy_ecc_j == 0.0
+    np.testing.assert_allclose(
+        led3.write_energy_logical_j, led1.write_energy_logical_j)
+    # replicas program on parallel tile sets: latency is ecc-independent
+    assert led3.write_latency_s == led1.write_latency_s
+    # every replica draws read current on every MVM
+    np.testing.assert_allclose(enc3.active_cells, 3 * enc1.active_cells)
+    assert "write_energy_ecc_j" in led3.as_dict()
+
+
+def test_ecc_rejects_bad_knobs():
+    W = jnp.ones((4, 4))
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="ecc_decode"):
+        encode_core(W, key, 256, 0.01, ecc=3, ecc_decode="vote")
+    with pytest.raises(ValueError, match="replication factor"):
+        encode_core(W, key, 256, 0.01, ecc=0)

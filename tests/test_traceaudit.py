@@ -38,7 +38,7 @@ DENSE = PathSpec("dense", "jnp", "fixed", False, True)
 
 @pytest.fixture(scope="module")
 def full_audit():
-    """One full-matrix audit shared by every assertion below (tracing 44
+    """One full-matrix audit shared by every assertion below (tracing 47
     paths once is the expensive part; the analyzers are cheap)."""
     baseline = load_baseline()
     assert baseline is not None, \
@@ -64,6 +64,10 @@ def test_matrix_covers_every_axis():
     # every backend gets a restart=False variant
     assert {s.backend for s in specs if not s.restart} == \
         {s.backend for s in specs}
+    # the refinement shells are audited too (crossbar mount + the dense
+    # self-mount), and only they carry the /refineN name suffix
+    assert {s.refine for s in specs} == {0, 1, 2}
+    assert all(("/refine" in s.name) == (s.refine > 0) for s in specs)
 
 
 def test_full_matrix_is_clean(full_audit):
@@ -75,12 +79,17 @@ def test_full_matrix_is_clean(full_audit):
 
 def test_every_path_reproduces_the_ledger(full_audit):
     """The acceptance claim: traced per-window MVMs == the formula the
-    energy ledger charges, and nothing MVM-shaped leaks outside."""
+    energy ledger charges (times the number of analog solves on refined
+    paths), and nothing MVM-shaped leaks outside beyond the refinement
+    shell's counted digital residual MVMs."""
     _, records, _, _ = full_audit
     for rec in records:
-        expected = engine.mvm_window_budget(CHECK_EVERY, rec.spec.restart)
+        expected = (engine.refine_window_factor(rec.spec.refine)
+                    * engine.mvm_window_budget(CHECK_EVERY,
+                                               rec.spec.restart))
         assert rec.counts["per_window"] == expected, rec.spec.name
-        assert rec.counts["outside"] == 0, rec.spec.name
+        assert rec.counts["outside"] == \
+            engine.refine_digital_mvms(rec.spec.refine), rec.spec.name
 
 
 def test_mvm_accounting_decomposes_into_window_budgets():
@@ -235,7 +244,7 @@ def test_adaptive_traces_identical_mvm_budget_to_fixed(full_audit):
     by_family = {}
     for rec in records:
         s = rec.spec
-        fam = (s.backend, s.kernel, s.megakernel, s.restart)
+        fam = (s.backend, s.kernel, s.megakernel, s.restart, s.refine)
         by_family.setdefault(fam, {})[s.step_rule] = rec
     checked = 0
     for rules in by_family.values():

@@ -3,7 +3,8 @@
 ``tools/jaxlint`` reads source; this tool reads what the source
 actually becomes.  It traces every supported solver path combo
 (operator backend x update kernel x step_rule x sparse_kernel x
-megakernel on/off) via ``jax.make_jaxpr`` on tiny shapes, then runs
+megakernel on/off, plus the mixed-precision refinement shells) via
+``jax.make_jaxpr`` on tiny shapes, then runs
 four analyzers over each jaxpr:
 
 budget       The primitive-budget checker walks the jaxpr into
@@ -85,11 +86,15 @@ class PathSpec:
     step_rule: str        # fixed | adaptive | strongly_convex
     megakernel: bool
     restart: bool
+    refine: int = 0       # iterative-refinement rounds (0 = plain solve)
 
     @property
     def name(self) -> str:
-        return (f"{self.backend}/{self.kernel}/{self.step_rule}"
+        base = (f"{self.backend}/{self.kernel}/{self.step_rule}"
                 f"/mega{int(self.megakernel)}/restart{int(self.restart)}")
+        # suffix only when nonzero so pre-refinement baseline names are
+        # stable across the matrix extension
+        return base + (f"/refine{self.refine}" if self.refine else "")
 
     @property
     def gamma(self) -> float:
@@ -113,6 +118,16 @@ def supported_paths() -> List[PathSpec]:
                     paths.append(PathSpec(backend, kernel, rule, mega,
                                           True))
         paths.append(PathSpec(backend, "jnp", "fixed", False, False))
+    # mixed-precision refinement shells (crossbar.refine.refined_core):
+    # the analog-operator mount the batched pipeline uses, plus the dense
+    # self-mount solve_crossbar_refined runs — each inner solve is one
+    # more while loop on the SAME operator, so budgets scale by
+    # engine.refine_window_factor and the digital residual MVMs land
+    # outside the loops (engine.refine_digital_mvms)
+    for refine in (1, 2):
+        paths.append(PathSpec("crossbar", "jnp", "fixed", False, True,
+                              refine))
+    paths.append(PathSpec("dense", "jnp", "fixed", False, True, 1))
     return paths
 
 
@@ -175,9 +190,33 @@ def _static_tuple(spec: PathSpec):
         max_iters=MAX_ITERS, check_every=CHECK_EVERY,
         kernel=spec.kernel, step_rule=spec.step_rule,
         megakernel=spec.megakernel, restart=spec.restart,
-        gamma=spec.gamma,
+        gamma=spec.gamma, refine_rounds=spec.refine,
         sparse_kernel="bcoo" if spec.backend == "bcoo" else "ell")
     return opts_static(opts)
+
+
+def _trace_refined(spec: PathSpec, prob, engine, operator_override=None):
+    """Refined paths: ``crossbar.refine.refined_core`` — digital exact
+    operator blocks for the residual MVMs, the backend's analog mount for
+    every inner solve (crossbar paths mount ``crossbar_operator`` the way
+    the batched pipeline does; dense self-mounts like the eager
+    ``solve_crossbar_refined`` driver)."""
+    import functools
+
+    import jax
+
+    from repro.crossbar.refine import refined_core
+
+    static = _static_tuple(spec)
+    key = jax.random.PRNGKey(0)
+    operator = (operator_override if operator_override is not None
+                else _make_operator(spec, prob, engine))
+    fn = (refined_core if operator is None else
+          functools.partial(refined_core, operator=operator))
+    K = prob["K"]
+    return jax.make_jaxpr(fn, static_argnums=(12,))(
+        K, K.T, K, K.T, prob["b"], prob["c"], prob["lb"], prob["ub"],
+        prob["T"], prob["Sigma"], prob["rho"], key, static)
 
 
 def _trace_sharded(spec: PathSpec, prob):
@@ -240,6 +279,8 @@ def trace_path(spec: PathSpec, operator_override=None):
         prob = _problem(jnp)
         if spec.backend == "sharded":
             jaxpr = _trace_sharded(spec, prob)
+        elif spec.refine > 0:
+            jaxpr = _trace_refined(spec, prob, engine, operator_override)
         else:
             static = _static_tuple(spec)
             key = jax.random.PRNGKey(0)
@@ -388,21 +429,28 @@ def check_budget(spec: PathSpec, counts: Dict[str, float],
     _ensure_import_paths()
     from repro.core import engine
     findings = []
-    expected = engine.mvm_window_budget(check_every, spec.restart)
+    window_factor = engine.refine_window_factor(spec.refine)
+    expected = (window_factor
+                * engine.mvm_window_budget(check_every, spec.restart))
     got = counts["per_window"]
     if got != expected:
         findings.append(Finding(
             spec.name, "budget",
-            f"per-window MVM count {got:g} != mvm_window_budget "
-            f"{expected} (= {engine.MVMS_PER_ITERATION}*{check_every} "
-            f"iterations + {engine.mvms_per_check(spec.restart)} check) "
+            f"per-window MVM count {got:g} != "
+            f"{window_factor}*mvm_window_budget "
+            f"{expected} (= {window_factor} analog solve(s) x "
+            f"({engine.MVMS_PER_ITERATION}*{check_every} iterations + "
+            f"{engine.mvms_per_check(spec.restart)} check)) "
             "— the energy ledger and the traced computation disagree"))
-    if counts["outside"] != 0:
+    expected_outside = engine.refine_digital_mvms(spec.refine)
+    if counts["outside"] != expected_outside:
         findings.append(Finding(
             spec.name, "budget",
             f"{counts['outside']:g} MVM-bearing primitive(s) outside "
-            "the while loop — solve_core charges no out-of-loop MVMs, "
-            "so these are unledgered device reads"))
+            f"the while loops, expected {expected_outside} "
+            "(refine_digital_mvms: the refinement shell's exact residual"
+            "/candidate MVMs run digitally outside the analog loops; "
+            "anything beyond that is an unledgered device read)"))
     return findings
 
 
@@ -413,7 +461,7 @@ def check_adaptive_delta(records) -> List[Finding]:
     by_family: Dict[tuple, dict] = {}
     for rec in records:
         s = rec.spec
-        fam = (s.backend, s.kernel, s.megakernel, s.restart)
+        fam = (s.backend, s.kernel, s.megakernel, s.restart, s.refine)
         by_family.setdefault(fam, {})[s.step_rule] = rec
     findings = []
     for fam, rules in by_family.items():
